@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: experiment grid, CSV emission, timers."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.core.admm import ADMMConfig, run_incremental_admm
+from repro.core.graph import make_network
+from repro.core.problems import DATASETS, allocate
+from repro.core.straggler import StragglerModel
+
+# Experiment scale (paper uses a laptop too; these sizes keep each figure
+# benchmark under ~a minute on 1 CPU core while preserving every comparison).
+N_AGENTS = 10
+K_ECNS = 3
+CONNECTIVITY = 0.5
+SEED = 0
+
+
+def setup(dataset: str, N: int = N_AGENTS, K: int = K_ECNS, seed: int = SEED):
+    net = make_network(N, CONNECTIVITY, seed=seed)
+    data = DATASETS[dataset](seed)
+    problem = allocate(data, N, K)
+    return net, problem
+
+
+def iters_to_accuracy(trace, target: float) -> float:
+    """First iteration index reaching the accuracy target (eq. 23), or inf."""
+    hit = np.nonzero(trace.accuracy <= target)[0]
+    return float(hit[0] + 1) if len(hit) else float("inf")
+
+
+def comm_to_accuracy(trace, target: float) -> float:
+    hit = np.nonzero(trace.accuracy <= target)[0]
+    return float(trace.comm_cost[hit[0]]) if len(hit) else float("inf")
+
+
+class Rows:
+    """Collects ``name,us_per_call,derived`` CSV rows."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.rows.append((name, us, derived))
+
+    def timeit(self, name: str, fn: Callable, *args, repeats: int = 3, **kw):
+        fn(*args, **kw)  # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn(*args, **kw)
+        us = (time.perf_counter() - t0) / repeats * 1e6
+        self.rows.append((name, us, ""))
+        return out
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")

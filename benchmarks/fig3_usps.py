@@ -1,0 +1,100 @@
+"""Paper Fig. 3 — least squares on USPS(-standin), Hamiltonian network.
+
+Sub-benchmarks (one per sub-figure):
+  (a) accuracy vs iterations for mini-batch sizes M in {6, 30, 60, 90}
+  (b) test error vs iterations for the same sweep
+  (c) accuracy vs communication cost: sI-ADMM vs W-ADMM / D-ADMM / DGD / EXTRA
+  (d) test error vs communication cost (same runs)
+  (e) running time under straggler delay: coded (cyclic/fractional) vs uncoded
+  (f) shortest-path-cycle traversal variant of (c)
+
+Claims validated (EXPERIMENTS.md 'Paper claims'):
+  - larger M converges to better accuracy at equal communication (Thm 2),
+  - incremental methods dominate gossip baselines in communication,
+  - coded schemes' running time is untouched by straggler delay epsilon.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.admm import ADMMConfig, run_incremental_admm
+from repro.core.baselines import run_dadmm, run_dgd, run_extra, run_wadmm
+from repro.core.straggler import StragglerModel
+
+from .common import Rows, comm_to_accuracy, setup
+
+ITERS = 1500
+
+
+def run(rows: Rows) -> dict:
+    net, problem = setup("usps")
+    out = {}
+
+    # (a)+(b) mini-batch sweep -------------------------------------------
+    # (USPS-standin: b=99 rows/agent over K=3 ECNs caps M at 90; the paper
+    # plots up to M=300 with a different N — the trend is what's validated)
+    for M in (6, 30, 60, 90):
+        cfg = ADMMConfig(M=M, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
+        tr = rows.timeit(f"fig3ab/sI-ADMM[M={M}]", run_incremental_admm,
+                         problem, net, cfg, ITERS, repeats=1)
+        out[f"M={M}"] = tr
+        rows.add(
+            f"fig3ab/sI-ADMM[M={M}]/final", 0.0,
+            f"acc={tr.accuracy[-1]:.4f};test_err={tr.test_error[-1]:.4f}",
+        )
+
+    # (c)+(d) vs baselines -------------------------------------------------
+    cfg = ADMMConfig(M=60, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
+    tr_si = out["M=60"]
+    tr_w = rows.timeit("fig3cd/W-ADMM", run_wadmm, problem, net, cfg, ITERS, repeats=1)
+    tr_da = rows.timeit("fig3cd/D-ADMM", run_dadmm, problem, net, 0.1, ITERS // 10, repeats=1)
+    tr_dgd = rows.timeit("fig3cd/DGD", run_dgd, problem, net, 0.05, ITERS // 10, repeats=1)
+    tr_ex = rows.timeit("fig3cd/EXTRA", run_extra, problem, net, 0.05, ITERS // 10, repeats=1)
+    target = 0.15
+    for name, tr in [
+        ("sI-ADMM", tr_si), ("W-ADMM", tr_w), ("D-ADMM", tr_da),
+        ("DGD", tr_dgd), ("EXTRA", tr_ex),
+    ]:
+        c = comm_to_accuracy(tr, target)
+        rows.add(
+            f"fig3cd/{name}/comm_to_acc{target}", 0.0,
+            f"comm={c};final_acc={tr.accuracy[-1]:.4f};"
+            f"final_test={tr.test_error[-1]:.4f}",
+        )
+    out.update(wadmm=tr_w, dadmm=tr_da, dgd=tr_dgd, extra=tr_ex)
+
+    # (e) straggler running time ------------------------------------------
+    # fractional repetition needs (S+1) | K, so it runs with K=4 ECNs
+    # (paper's Fig. 2 cyclic example is exactly K=3, S=1).
+    net4, problem4 = setup("usps", K=4)
+    for eps in (2e-3, 5e-3, 1e-2):
+        strag = StragglerModel(p_straggle=0.3, delay=5e-3, epsilon=eps)
+        res = {}
+        for label, scheme, S, K, nt, pb in [
+            ("uncoded", "uncoded", 0, 3, net, problem),
+            ("cyclic", "cyclic", 1, 3, net, problem),
+            ("fractional", "fractional", 1, 4, net4, problem4),
+        ]:
+            M = 60 if K == 3 else 48  # divisible by (S+1)*K
+            cfg = ADMMConfig(M=M, K=K, S=S, scheme=scheme,
+                             rho=1.0, c_tau=0.5, c_gamma=1.0)
+            tr = run_incremental_admm(pb, nt, cfg, ITERS, straggler=strag)
+            res[label] = tr
+            rows.add(
+                f"fig3e/{label}[eps={eps}]", 0.0,
+                f"sim_time={tr.sim_time[-1]:.4f}s;acc={tr.accuracy[-1]:.4f}",
+            )
+        out[f"straggler_eps={eps}"] = res
+
+    # (f) shortest-path cycle ----------------------------------------------
+    cfg = ADMMConfig(M=60, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5,
+                     c_gamma=1.0, traversal="shortest_path")
+    tr = rows.timeit("fig3f/sI-ADMM[shortest_path]", run_incremental_admm,
+                     problem, net, cfg, ITERS, repeats=1)
+    rows.add(
+        "fig3f/sI-ADMM[shortest_path]/final", 0.0,
+        f"acc={tr.accuracy[-1]:.4f};comm={tr.comm_cost[-1]:.0f}",
+    )
+    out["shortest_path"] = tr
+    return out

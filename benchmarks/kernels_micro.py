@@ -1,0 +1,89 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU) vs jnp oracle.
+
+On CPU, interpret-mode timings measure Python-level kernel-body execution,
+NOT TPU performance — the derived column therefore reports the achieved
+numerical agreement and the kernel's VMEM working set per grid step, which
+ARE meaningful off-TPU. Wall times are recorded for regression tracking
+only."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import coded_admm_update, flash_attention, rglru_scan, ssd_scan
+from repro.kernels.ref import (
+    coded_admm_update_ref,
+    flash_attention_ref,
+    rglru_scan_ref,
+    ssd_scan_ref,
+)
+
+from .common import Rows
+
+
+def run(rows: Rows) -> dict:
+    out = {}
+    key = jax.random.key(0)
+
+    # coded_admm_update: J=4 messages over a 1M-param model
+    J, n = 4, 1 << 20
+    ks = jax.random.split(key, 5)
+    msgs = jax.random.normal(ks[0], (J, n), jnp.float32)
+    coeffs = jax.random.normal(ks[1], (J,), jnp.float32)
+    x, y, z = (jax.random.normal(k, (n,), jnp.float32) for k in ks[2:5])
+    tau = jnp.asarray(2.0)
+    got = rows.timeit(
+        "kernels/coded_admm_update[J=4,n=1M]", coded_admm_update,
+        msgs, coeffs, x, y, z, tau, 1.0, repeats=2,
+    )
+    ref = coded_admm_update_ref(msgs, coeffs, x, y, z, tau, 1.0)
+    err = float(jnp.abs(got - ref).max())
+    vmem = (J + 4) * 4096 * 4 / 1024
+    rows.add("kernels/coded_admm_update/check", 0.0,
+             f"max_err={err:.2e};vmem_per_step={vmem:.0f}KiB")
+
+    # flash attention: 1k tokens GQA
+    B, S, H, KV, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+    got = rows.timeit(
+        "kernels/flash_attention[1k,GQA4]", flash_attention, q, k, v,
+        repeats=1,
+    )
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    err = float(jnp.abs(got.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+    vmem = (128 * hd + 2 * 256 * hd + 128 * hd) * 4 / 1024
+    rows.add("kernels/flash_attention/check", 0.0,
+             f"max_err={err:.2e};vmem_per_step={vmem:.0f}KiB")
+
+    # ssd_scan
+    B, S, Hh, P, N = 1, 512, 4, 32, 64
+    x_ = jax.random.normal(ks[0], (B, S, Hh, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Hh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)) / np.sqrt(N)
+    Cm = jax.random.normal(ks[4], (B, S, N)) / np.sqrt(N)
+    got_y, got_h = rows.timeit(
+        "kernels/ssd_scan[512x4x32x64]", ssd_scan, x_, dt, A, Bm, Cm,
+        repeats=1,
+    )
+    ref_y, ref_h = ssd_scan_ref(x_, dt, A, Bm, Cm)
+    err = float(jnp.abs(got_y - ref_y).max())
+    rows.add("kernels/ssd_scan/check", 0.0, f"max_err={err:.2e}")
+
+    # rglru_scan
+    B, S, W = 2, 1024, 256
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W))
+    got_h, got_last = rows.timeit(
+        "kernels/rglru_scan[1kx256]", rglru_scan, a, b, repeats=1,
+    )
+    ref_h, ref_last = rglru_scan_ref(a, b)
+    err = float(jnp.abs(got_h - ref_h).max())
+    rows.add("kernels/rglru_scan/check", 0.0, f"max_err={err:.2e}")
+    return out

@@ -1,0 +1,105 @@
+"""Roofline table from dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads the JSONL written by ``repro.launch.dryrun --out`` and renders, per
+(arch x shape x mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPS (useful-compute fraction), and per-device memory.
+
+  PYTHONPATH=src python -m benchmarks.roofline results/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def load(path: str) -> List[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    return recs
+
+
+def fmt_s(v: float) -> str:
+    if v >= 1:
+        return f"{v:7.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:6.1f}ms"
+    return f"{v * 1e6:6.1f}us"
+
+
+def render_rows(recs: List[dict]) -> List[str]:
+    rows = []
+    for r in recs:
+        if r.get("skipped"):
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{'multi' if r['multi_pod'] else 'single'} | — | — | — | — | "
+                f"skipped: {r['skipped'][:60]}… |"
+            )
+            continue
+        uf = r.get("useful_flop_frac")
+        peak = (r.get("memory") or {}).get("peak_bytes")
+        peak_gb = f"{peak / 2**30:.1f}" if peak else "—"
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {c} | {m} | {k} | {b} | "
+            "{uf} | {peak} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                mesh=("multi" if r["multi_pod"] else "single")
+                + ("/" + r["step"] if r["step"].startswith("consensus") else "")
+                + (f" [{r['opts']}]" if r.get("opts") else ""),
+                c=fmt_s(r["compute_s"]).strip(),
+                m=fmt_s(r["memory_s"]).strip(),
+                k=fmt_s(r["collective_s"]).strip(),
+                b=r["bottleneck"].replace("_s", ""),
+                uf=f"{uf:.3f}" if uf else "—",
+                peak=peak_gb,
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        print("usage: python -m benchmarks.roofline <dryrun.jsonl>")
+        return 1
+    recs = load(argv[0])
+    print(
+        "| arch | shape | mesh | compute | memory | collective | "
+        "bottleneck | useful | peak/dev GB |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|")
+    for row in render_rows(recs):
+        print(row)
+    # summary: worst useful fraction, most collective-bound
+    live = [r for r in recs if not r.get("skipped")]
+    if live:
+        worst = min(
+            (r for r in live if r.get("useful_flop_frac")),
+            key=lambda r: r["useful_flop_frac"],
+        )
+        coll = max(
+            live,
+            key=lambda r: r["collective_s"]
+            / max(r["compute_s"], r["memory_s"], 1e-12),
+        )
+        print(
+            f"\nworst useful-FLOP fraction: {worst['arch']} x {worst['shape']}"
+            f" ({worst['useful_flop_frac']:.3f})"
+        )
+        print(
+            f"most collective-bound: {coll['arch']} x {coll['shape']} "
+            f"(collective/{coll['bottleneck']} ratio "
+            f"{coll['collective_s'] / max(coll['compute_s'], coll['memory_s'], 1e-12):.2f})"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

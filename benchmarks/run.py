@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
+``--only fig3,fig5``; the roofline table is produced separately from
+dry-run records by ``python -m benchmarks.roofline``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import Rows
+
+MODULES = ("fig3", "fig4", "fig5", "kernels")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only", default=None,
+        help=f"comma-separated subset of {MODULES}",
+    )
+    args = ap.parse_args(argv)
+    selected = args.only.split(",") if args.only else list(MODULES)
+
+    rows = Rows()
+    t0 = time.time()
+    if "fig3" in selected:
+        from . import fig3_usps
+
+        fig3_usps.run(rows)
+    if "fig4" in selected:
+        from . import fig4_ijcnn1
+
+        fig4_ijcnn1.run(rows)
+    if "fig5" in selected:
+        from . import fig5_stragglers
+
+        fig5_stragglers.run(rows)
+    if "kernels" in selected:
+        from . import kernels_micro
+
+        kernels_micro.run(rows)
+
+    print("name,us_per_call,derived")
+    rows.emit()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""End-to-end reproduction of the paper's §V experiment in one script.
+
+Runs the full comparison on the USPS-shaped dataset: sI-ADMM (uncoded) and
+csI-ADMM (cyclic & fractional) against W-ADMM, D-ADMM, DGD and EXTRA, then
+the straggler running-time experiment — and prints the three headline
+checks the paper makes:
+
+  1. communication efficiency: incremental ADMM reaches the accuracy
+     target with fewer communication units than gossip baselines,
+  2. mini-batch effect: larger M converges further at equal iterations,
+  3. straggler robustness: coded running time is (nearly) flat in the
+     straggler delay cap while uncoded grows with it.
+
+  PYTHONPATH=src python examples/decentralized_lstsq.py
+"""
+
+import numpy as np
+
+from repro.core.admm import ADMMConfig, run_incremental_admm
+from repro.core.baselines import run_dadmm, run_dgd, run_extra, run_wadmm
+from repro.core.graph import make_network
+from repro.core.problems import DATASETS, allocate
+from repro.core.straggler import StragglerModel
+
+N, K, ITERS, TARGET = 10, 3, 1200, 0.15
+
+net = make_network(N, connectivity=0.5, seed=0)
+problem = allocate(DATASETS["usps"](0), N, K)
+
+
+def comm_to(trace, target):
+    hit = np.nonzero(trace.accuracy <= target)[0]
+    return trace.comm_cost[hit[0]] if len(hit) else float("inf")
+
+
+# --- 1. communication comparison -----------------------------------------
+cfg = ADMMConfig(M=60, K=K, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
+traces = {
+    "sI-ADMM": run_incremental_admm(problem, net, cfg, ITERS),
+    "W-ADMM": run_wadmm(problem, net, cfg, ITERS),
+    "D-ADMM": run_dadmm(problem, net, 0.1, ITERS // 10),
+    "DGD": run_dgd(problem, net, 0.05, ITERS // 10),
+    "EXTRA": run_extra(problem, net, 0.05, ITERS // 10),
+}
+print(f"{'method':10s} {'comm to acc<=' + str(TARGET):>16s} {'final acc':>10s}")
+for name, tr in traces.items():
+    print(f"{name:10s} {comm_to(tr, TARGET):16.0f} {tr.accuracy[-1]:10.4f}")
+assert comm_to(traces["sI-ADMM"], TARGET) < comm_to(traces["D-ADMM"], TARGET)
+
+# --- 2. mini-batch effect --------------------------------------------------
+print("\nmini-batch sweep (uncoded sI-ADMM):")
+finals = {}
+for M in (6, 30, 90):
+    cfg = ADMMConfig(M=M, K=K, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
+    tr = run_incremental_admm(problem, net, cfg, ITERS)
+    finals[M] = tr.accuracy[-1]
+    print(f"  M={M:3d}: final accuracy {tr.accuracy[-1]:.4f}")
+assert finals[90] < finals[6], "larger mini-batch should converge further"
+
+# --- 3. straggler robustness ----------------------------------------------
+print("\nstraggler running time (30% straggle prob, delay cap sweep):")
+rows = {}
+for eps in (2e-3, 1e-2):
+    strag = StragglerModel(p_straggle=0.3, delay=5e-3, epsilon=eps)
+    for label, scheme, S in (("uncoded", "uncoded", 0), ("csI-ADMM", "cyclic", 1)):
+        cfg = ADMMConfig(M=60, K=K, S=S, scheme=scheme, rho=1.0, c_tau=0.5, c_gamma=1.0)
+        tr = run_incremental_admm(problem, net, cfg, ITERS, straggler=strag)
+        rows[(label, eps)] = tr.sim_time[-1]
+        print(f"  {label:9s} eps={eps:.0e}: {tr.sim_time[-1]:6.2f}s "
+              f"(acc {tr.accuracy[-1]:.4f})")
+uncoded_growth = rows[("uncoded", 1e-2)] / rows[("uncoded", 2e-3)]
+coded_growth = rows[("csI-ADMM", 1e-2)] / rows[("csI-ADMM", 2e-3)]
+print(f"\nrunning-time growth with 5x delay cap: "
+      f"uncoded {uncoded_growth:.2f}x vs coded {coded_growth:.2f}x")
+assert coded_growth < uncoded_growth
+print("OK — all three §V claims reproduced.")

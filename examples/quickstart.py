@@ -1,0 +1,40 @@
+"""Quickstart: coded stochastic incremental ADMM in ~40 lines.
+
+Solves the paper's decentralized least-squares problem (eq. 24) on the
+synthetic dataset (Table I) with N=10 agents, K=3 ECNs per agent, and a
+(3, 2) cyclic MDS gradient code tolerating S=1 straggler per agent —
+exactly the Fig. 2 construction.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.admm import ADMMConfig, run_incremental_admm
+from repro.core.graph import make_network
+from repro.core.problems import make_synthetic, allocate
+from repro.core.straggler import StragglerModel
+
+# 1. A connected network of 10 agents (Hamiltonian cycle exists).
+net = make_network(N=10, connectivity=0.5, seed=0)
+
+# 2. The paper's synthetic least squares, disjointly allocated: each agent
+#    gets b rows, split into K=3 partitions (one per edge-compute node).
+problem = allocate(make_synthetic(seed=0), N=10, K=3)
+
+# 3. csI-ADMM: cyclic (K=3, S=1) MDS code — any 2-of-3 ECN responses decode
+#    the exact mini-batch gradient (paper Fig. 2), so one straggler per
+#    agent never stalls an iteration.
+cfg = ADMMConfig(
+    M=60,            # mini-batch size (M_bar = M/(S+1) = 30 per eq. 22)
+    K=3, S=1, scheme="cyclic",
+    rho=1.0, c_tau=0.5, c_gamma=1.0,  # Theorem-2 schedules
+)
+stragglers = StragglerModel(p_straggle=0.3, delay=5e-3, epsilon=1e-2)
+
+trace = run_incremental_admm(problem, net, cfg, iters=800, straggler=stragglers)
+
+print(f"final accuracy (eq. 23 relative error): {trace.accuracy[-1]:.4f}")
+print(f"final test MSE:                         {trace.test_error[-1]:.4f}")
+print(f"communication used:                     {trace.comm_cost[-1]:.0f} units")
+print(f"simulated wall time:                    {trace.sim_time[-1]:.3f} s")
+assert trace.accuracy[-1] < 0.1, "csI-ADMM should converge on this problem"
+print("OK — csI-ADMM converged under random stragglers.")

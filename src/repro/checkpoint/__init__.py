@@ -1,0 +1,11 @@
+"""Host checkpointing of arbitrary pytrees as flat .npz archives."""
+
+from .npz import load_pytree, save_pytree, latest_step, save_step, restore_step
+
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_step",
+    "restore_step",
+    "latest_step",
+]

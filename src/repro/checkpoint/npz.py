@@ -1,0 +1,103 @@
+"""Flat-key .npz pytree checkpointing (atomic writes, step directories).
+
+Keys flatten the pytree path with '/'; bfloat16 leaves round-trip via a
+uint16 view (npz has no bf16 dtype) recorded in a sidecar '__bf16__' list.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "save_step", "restore_step", "latest_step"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = _flatten(tree)
+    bf16 = [k for k, v in flat.items() if v.dtype == jnp.bfloat16]
+    arrays = {
+        k: (v.view(np.uint16) if k in bf16 else v) for k, v in flat.items()
+    }
+    arrays["__bf16__"] = np.array(bf16, dtype=np.str_)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic: write to a temp file in the same dir, then rename
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path, allow_pickle=False) as z:
+        bf16 = set(z["__bf16__"].tolist()) if "__bf16__" in z else set()
+        flat = {k: z[k] for k in z.files if k != "__bf16__"}
+    ref = _flatten(like)
+    if set(flat) != set(ref):
+        missing = set(ref) - set(flat)
+        extra = set(flat) - set(ref)
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    out = []
+    for key, ref_leaf in zip(paths, leaves_ref):
+        arr = flat[key]
+        if key in bf16:
+            arr = arr.view(jnp.bfloat16)
+        if arr.shape != np.shape(ref_leaf):
+            raise ValueError(
+                f"{key}: shape {arr.shape} != expected {np.shape(ref_leaf)}"
+            )
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def save_step(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    save_pytree(path, tree)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_step(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    return load_pytree(os.path.join(ckpt_dir, f"step_{step:08d}.npz"), like), step

@@ -1,0 +1,10 @@
+"""Assigned architecture configs + input shapes.
+
+Each ``<arch>.py`` exposes ``CONFIG`` (the exact assigned hyper-parameters,
+with source citation) and ``SMOKE`` (a reduced same-family variant: <=2-3
+layers, d_model <= 512, <= 4 experts) for CPU smoke tests.
+"""
+
+from .registry import ARCHS, SHAPES, get_config, get_smoke_config, input_specs
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "get_smoke_config", "input_specs"]

@@ -1,0 +1,46 @@
+"""The paper's primary contribution: (coded) stochastic incremental ADMM.
+
+Faithful implementation of Algorithms 1 & 2 plus the baselines and the
+timing/straggler model used in the paper's experiments (§V). The distributed
+TPU mapping of the same algorithm lives in `repro.distributed`.
+"""
+
+from .admm import ADMMConfig, Trace, run_incremental_admm
+from .baselines import run_dadmm, run_dgd, run_extra, run_wadmm
+from .coding import GradientCode, make_code, paper_fig2_code
+from .graph import Network, make_network, metropolis_weights
+from .problems import (
+    DATASETS,
+    Dataset,
+    LeastSquaresProblem,
+    allocate,
+    make_ijcnn1_standin,
+    make_synthetic,
+    make_usps_standin,
+)
+from .straggler import StragglerModel, sample_times
+
+__all__ = [
+    "ADMMConfig",
+    "Trace",
+    "run_incremental_admm",
+    "run_dadmm",
+    "run_dgd",
+    "run_extra",
+    "run_wadmm",
+    "GradientCode",
+    "make_code",
+    "paper_fig2_code",
+    "Network",
+    "make_network",
+    "metropolis_weights",
+    "DATASETS",
+    "Dataset",
+    "LeastSquaresProblem",
+    "allocate",
+    "make_synthetic",
+    "make_usps_standin",
+    "make_ijcnn1_standin",
+    "StragglerModel",
+    "sample_times",
+]

@@ -1,0 +1,287 @@
+"""State-of-the-art baselines the paper compares against (§V-A).
+
+  1) W-ADMM  [3]  — random-walk incremental ADMM (Walkman): same incremental
+                    updates as sI-ADMM but the token performs a uniform random
+                    walk over neighbors (one agent + one link per iteration).
+  2) D-ADMM  [14]/[9] — gossip-style decentralized consensus ADMM: every agent
+                    updates every iteration using all its neighbors (2|E|
+                    directed messages per iteration).
+  3) DGD     [6]  — decentralized gradient descent with Metropolis mixing and
+                    diminishing step size.
+  4) EXTRA   [7]  — exact first-order gossip method with constant step size.
+
+All baselines run on the same `LeastSquaresProblem` and report the same
+metrics as `repro.core.admm` (accuracy eq. 23, test error, cumulative
+communication units) so the benchmark figures are directly comparable.
+Gossip baselines use full local gradients (as in the original methods);
+incremental baselines use the same stochastic oracle as sI-ADMM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .admm import ADMMConfig, Trace
+from .graph import Network, metropolis_weights
+from .problems import LeastSquaresProblem
+
+__all__ = ["run_wadmm", "run_dadmm", "run_dgd", "run_extra"]
+
+
+def _metrics(x, z_mean, x_star, xs_norm, O_test, T_test, N):
+    acc = jnp.mean(
+        jnp.linalg.norm((x - x_star[None]).reshape(N, -1), axis=1)
+        / jnp.maximum(xs_norm, 1e-12)
+    )
+    r = O_test @ z_mean - T_test
+    test_err = jnp.mean(jnp.sum(r * r, axis=-1))
+    z_err = jnp.linalg.norm(z_mean - x_star) / jnp.maximum(xs_norm, 1e-12)
+    return acc, test_err, z_err
+
+
+def _trace(acc, test_err, z_err, comm_per_iter, x, z) -> Trace:
+    iters = len(np.asarray(acc))
+    comm = np.cumsum(np.full(iters, float(comm_per_iter)))
+    return Trace(
+        accuracy=np.asarray(acc),
+        test_error=np.asarray(test_err),
+        comm_cost=comm,
+        sim_time=np.zeros(iters),
+        z_err=np.asarray(z_err),
+        final_x=np.asarray(x),
+        final_z=np.asarray(z),
+    )
+
+
+# --------------------------------------------------------------------------
+# W-ADMM (Walkman) — random-walk incremental ADMM
+# --------------------------------------------------------------------------
+
+
+def run_wadmm(
+    problem: LeastSquaresProblem,
+    net: Network,
+    cfg: ADMMConfig,
+    iters: int,
+) -> Trace:
+    """Walkman with the same stochastic proximal-linearized x-update."""
+    N, p, d, b = problem.N, problem.p, problem.d, problem.b
+    rng = np.random.default_rng(cfg.seed)
+    # Random walk over neighbors.
+    agents = np.zeros(iters, dtype=np.int32)
+    cur = int(rng.integers(N))
+    for k in range(iters):
+        agents[k] = cur
+        cur = int(rng.choice(net.neighbors(cur)))
+    M = cfg.M
+    nb = max(b // M, 1)
+    offsets = ((np.arange(iters) // N % nb) * M).astype(np.int32)
+    tau = cfg.c_tau * np.sqrt(np.arange(1, iters + 1))
+    gamma = cfg.c_gamma / np.sqrt(np.arange(1, iters + 1))
+
+    x_star = problem.x_star()
+    x, z, acc, test_err, z_err = _scan_walk(
+        jnp.asarray(problem.O),
+        jnp.asarray(problem.T),
+        jnp.asarray(x_star.astype(problem.O.dtype)),
+        jnp.asarray(problem.O_test),
+        jnp.asarray(problem.T_test),
+        jnp.asarray(agents),
+        jnp.asarray(offsets),
+        jnp.asarray(tau.astype(problem.O.dtype)),
+        jnp.asarray(gamma.astype(problem.O.dtype)),
+        float(cfg.rho),
+        M=M,
+        N=N,
+    )
+    return _trace(acc, test_err, z_err, 1.0, x, z)
+
+
+@partial(jax.jit, static_argnames=("M", "N"))
+def _scan_walk(O, T, x_star, O_test, T_test, agents, offsets, tau, gamma, rho, *, M, N):
+    p, d = O.shape[2], T.shape[2]
+    x0 = jnp.zeros((N, p, d), O.dtype)
+    y0 = jnp.zeros((N, p, d), O.dtype)
+    z0 = jnp.zeros((p, d), O.dtype)
+    xs_norm = jnp.linalg.norm(x_star)
+
+    def step(carry, inp):
+        x, y, z = carry
+        i, off, tk, gk = inp
+        zero = jnp.zeros((), off.dtype)
+        Ob = jax.lax.dynamic_slice(O[i], (off, zero), (M, p))
+        Tb = jax.lax.dynamic_slice(T[i], (off, zero), (M, d))
+        xi, yi = x[i], y[i]
+        G = Ob.T @ (Ob @ xi - Tb) / M
+        x_new = (tk * xi + rho * z + yi - G) / (rho + tk)
+        y_new = yi + rho * gk * (z - x_new)
+        z_new = z + ((x_new - xi) - (y_new - yi) / rho) / N
+        x = x.at[i].set(x_new)
+        y = y.at[i].set(y_new)
+        return (x, y, z_new), _metrics(
+            x, z_new, x_star, xs_norm, O_test, T_test, N
+        )
+
+    (x, y, z), out = jax.lax.scan(
+        step, (x0, y0, z0), (agents, offsets, tau, gamma)
+    )
+    return x, z, *out
+
+
+# --------------------------------------------------------------------------
+# D-ADMM — gossip decentralized consensus ADMM
+# --------------------------------------------------------------------------
+
+
+def run_dadmm(
+    problem: LeastSquaresProblem,
+    net: Network,
+    rho: float,
+    iters: int,
+) -> Trace:
+    N, p = problem.N, problem.p
+    A = jnp.asarray(net.adjacency.astype(problem.O.dtype))
+    deg = jnp.asarray(net.degree().astype(problem.O.dtype))
+    x_star = problem.x_star()
+    x, acc, test_err, z_err = _scan_dadmm(
+        jnp.asarray(problem.O),
+        jnp.asarray(problem.T),
+        A,
+        deg,
+        jnp.asarray(x_star.astype(problem.O.dtype)),
+        jnp.asarray(problem.O_test),
+        jnp.asarray(problem.T_test),
+        float(rho),
+        iters=iters,
+    )
+    return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _scan_dadmm(O, T, A, deg, x_star, O_test, T_test, rho, *, iters):
+    N, b, p = O.shape
+    d = T.shape[2]
+    xs_norm = jnp.linalg.norm(x_star)
+    H = jnp.einsum("nbp,nbq->npq", O, O) / b  # (N, p, p)
+    rhs0 = jnp.einsum("nbp,nbd->npd", O, T) / b
+    eye = jnp.eye(p, dtype=O.dtype)
+    # Per-agent solve operator: (H_i + 2 rho d_i I)
+    Hs = H + 2.0 * rho * deg[:, None, None] * eye[None]
+
+    def step(carry, _):
+        x, alpha = carry
+        nbr_sum = jnp.einsum("ij,jpd->ipd", A, x)
+        rhs = rhs0 + rho * (deg[:, None, None] * x + nbr_sum) - alpha
+        x_new = jnp.linalg.solve(Hs, rhs)
+        nbr_sum_new = jnp.einsum("ij,jpd->ipd", A, x_new)
+        alpha = alpha + rho * (deg[:, None, None] * x_new - nbr_sum_new)
+        z_mean = x_new.mean(0)
+        return (x_new, alpha), _metrics(
+            x_new, z_mean, x_star, xs_norm, O_test, T_test, N
+        )
+
+    x0 = jnp.zeros((N, p, d), O.dtype)
+    (x, _), out = jax.lax.scan(step, (x0, x0), None, length=iters)
+    return x, *out
+
+
+# --------------------------------------------------------------------------
+# DGD and EXTRA — gossip first-order methods
+# --------------------------------------------------------------------------
+
+
+def run_dgd(
+    problem: LeastSquaresProblem,
+    net: Network,
+    alpha0: float,
+    iters: int,
+    diminishing: bool = True,
+) -> Trace:
+    W = jnp.asarray(metropolis_weights(net).astype(problem.O.dtype))
+    x_star = problem.x_star()
+    steps = alpha0 / np.sqrt(np.arange(1, iters + 1)) if diminishing else np.full(iters, alpha0)
+    x, acc, test_err, z_err = _scan_dgd(
+        jnp.asarray(problem.O),
+        jnp.asarray(problem.T),
+        W,
+        jnp.asarray(x_star.astype(problem.O.dtype)),
+        jnp.asarray(problem.O_test),
+        jnp.asarray(problem.T_test),
+        jnp.asarray(steps.astype(problem.O.dtype)),
+    )
+    return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
+
+
+@jax.jit
+def _scan_dgd(O, T, W, x_star, O_test, T_test, steps):
+    N, b, p = O.shape
+    d = T.shape[2]
+    xs_norm = jnp.linalg.norm(x_star)
+
+    def grad(x):
+        return jnp.einsum("nbp,nbd->npd", O, jnp.einsum("nbp,npd->nbd", O, x) - T) / b
+
+    def step(x, alpha):
+        x_new = jnp.einsum("ij,jpd->ipd", W, x) - alpha * grad(x)
+        return x_new, _metrics(
+            x_new, x_new.mean(0), x_star, xs_norm, O_test, T_test, N
+        )
+
+    x0 = jnp.zeros((N, p, d), O.dtype)
+    x, out = jax.lax.scan(step, x0, steps)
+    return x, *out
+
+
+def run_extra(
+    problem: LeastSquaresProblem,
+    net: Network,
+    alpha: float,
+    iters: int,
+) -> Trace:
+    W = jnp.asarray(metropolis_weights(net).astype(problem.O.dtype))
+    x_star = problem.x_star()
+    x, acc, test_err, z_err = _scan_extra(
+        jnp.asarray(problem.O),
+        jnp.asarray(problem.T),
+        W,
+        jnp.asarray(x_star.astype(problem.O.dtype)),
+        jnp.asarray(problem.O_test),
+        jnp.asarray(problem.T_test),
+        float(alpha),
+        iters=iters,
+    )
+    return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _scan_extra(O, T, W, x_star, O_test, T_test, alpha, *, iters):
+    N, b, p = O.shape
+    d = T.shape[2]
+    xs_norm = jnp.linalg.norm(x_star)
+    W_tilde = 0.5 * (jnp.eye(N, dtype=O.dtype) + W)
+
+    def grad(x):
+        return jnp.einsum("nbp,nbd->npd", O, jnp.einsum("nbp,npd->nbd", O, x) - T) / b
+
+    x0 = jnp.zeros((N, p, d), O.dtype)
+    x1 = jnp.einsum("ij,jpd->ipd", W, x0) - alpha * grad(x0)
+
+    def step(carry, _):
+        x_prev, x_cur = carry
+        x_next = (
+            jnp.einsum("ij,jpd->ipd", jnp.eye(N, dtype=O.dtype) + W, x_cur)
+            - jnp.einsum("ij,jpd->ipd", W_tilde, x_prev)
+            - alpha * (grad(x_cur) - grad(x_prev))
+        )
+        return (x_cur, x_next), _metrics(
+            x_next, x_next.mean(0), x_star, xs_norm, O_test, T_test, N
+        )
+
+    (_, x), out = jax.lax.scan(step, (x0, x1), None, length=iters)
+    return x, *out

@@ -1,0 +1,246 @@
+"""(K, R) MDS gradient coding over the real field — paper §III-B.
+
+Implements the two repetition schemes of Tandon et al. [23] that the paper
+adopts for csI-ADMM (Algorithm 2):
+
+- **Fractional repetition**: deterministic 0/1 encoding. The K ECNs are split
+  into (S+1) groups of K/(S+1); each group disjointly covers all K data
+  partitions, so every partition is replicated (S+1) times. Any K-S alive
+  ECNs contain at least one intact group (pigeonhole), whose indicator is the
+  decode vector.
+- **Cyclic repetition**: ECN j holds partitions {j, j+1, ..., j+S} (mod K).
+  Tandon et al.'s randomized construction: draw H in R^{S x K} with H @ 1 = 0;
+  row j of B is the (generically unique) vector in null(H) supported on
+  {j, ..., j+S}. Then rowspan(B) = null(H) contains the all-ones vector and
+  any K-S rows span it (general position), so any R = K-S responses decode
+  exactly — we *verify* this at construction time and re-draw on failure, so
+  the returned code is certified.
+
+The paper's Fig. 2 example (K=3, S=1) is the cyclic scheme:
+    g1 = 1/2 g~1 + g~2 ,  g2 = g~2 - g~3 ,  g3 = 1/2 g~1 + g~3
+and any two responses recover g~1 + g~2 + g~3 exactly.
+
+Encoding/decoding are linear maps over stacked partition gradients, so the
+same matrices drive both the faithful simulator (`repro.core.admm`) and the
+TPU mesh runtime (`repro.distributed.coded_grad`), where decode becomes a
+masked weighted all-reduce and the combine is fused by the
+`repro.kernels.coded_combine` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "GradientCode",
+    "make_code",
+    "fractional_repetition_code",
+    "cyclic_repetition_code",
+    "uncoded",
+    "paper_fig2_code",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientCode:
+    """A certified (K, R) gradient code.
+
+    Attributes:
+      name: scheme name ("fractional", "cyclic", "uncoded").
+      K: number of ECNs (= number of data partitions, d = n in [23]).
+      S: number of tolerated stragglers; R = K - S responses suffice.
+      B: (K, K) encode matrix. ECN j transmits ``B[j] @ partial_grads`` where
+        ``partial_grads`` stacks the K per-partition gradients. Row support
+        of B[j] is the set of partitions ECN j must store/compute.
+    """
+
+    name: str
+    K: int
+    S: int
+    B: np.ndarray  # (K, K) float64
+
+    @property
+    def R(self) -> int:
+        return self.K - self.S
+
+    def support(self, j: int) -> np.ndarray:
+        """Partition indices ECN j computes gradients for."""
+        return np.nonzero(np.abs(self.B[j]) > 1e-12)[0]
+
+    @property
+    def replication(self) -> int:
+        """Max #partitions per ECN (storage/compute overhead factor)."""
+        return int(max(len(self.support(j)) for j in range(self.K)))
+
+    def encode(self, partial_grads: np.ndarray) -> np.ndarray:
+        """Coded messages from stacked per-partition gradients (K, ...)."""
+        g = np.asarray(partial_grads)
+        return np.tensordot(self.B, g.reshape(self.K, -1), axes=1).reshape(
+            g.shape
+        )
+
+    def decode_vector(self, alive: np.ndarray) -> np.ndarray:
+        """a with a^T B = 1^T and a supported on alive ECNs.
+
+        ``alive`` is a boolean mask of length K with >= R True entries.
+        Raises ValueError if the alive set cannot decode (should not happen
+        for a certified code with >= R alive).
+        """
+        alive = np.asarray(alive, dtype=bool)
+        if alive.sum() < self.R:
+            raise ValueError(
+                f"need >= R={self.R} responses, got {int(alive.sum())}"
+            )
+        idx = np.nonzero(alive)[0]
+        # Solve B[idx]^T a_idx = 1 in the least-squares sense; exactness is
+        # asserted (certified codes always decode exactly).
+        ones = np.ones(self.K)
+        a_idx, *_ = np.linalg.lstsq(self.B[idx].T, ones, rcond=None)
+        resid = self.B[idx].T @ a_idx - ones
+        if np.max(np.abs(resid)) > 1e-6:
+            raise ValueError(f"alive set {idx.tolist()} is not decodable")
+        a = np.zeros(self.K)
+        a[idx] = a_idx
+        return a
+
+    def decode(self, messages: np.ndarray, alive: np.ndarray) -> np.ndarray:
+        """Exact full-batch gradient sum from alive coded messages.
+
+        ``messages``: (K, ...) coded gradients (rows for dead ECNs ignored).
+        Returns sum_t partial_grads[t] (shape = messages.shape[1:]).
+        """
+        a = self.decode_vector(alive)
+        m = np.asarray(messages).reshape(self.K, -1)
+        return (a @ m).reshape(np.asarray(messages).shape[1:])
+
+    def verify(self, max_patterns: int = 4096, rng: Optional[np.random.Generator] = None) -> bool:
+        """Check decodability for straggler patterns of size exactly S.
+
+        Exhaustive when C(K, S) <= max_patterns, else a random sample.
+        """
+        if self.S == 0:
+            patterns = [()]
+        else:
+            n_comb = _ncr(self.K, self.S)
+            if n_comb <= max_patterns:
+                patterns = itertools.combinations(range(self.K), self.S)
+            else:
+                rng = rng or np.random.default_rng(0)
+                patterns = [
+                    tuple(rng.choice(self.K, size=self.S, replace=False))
+                    for _ in range(max_patterns)
+                ]
+        for dead in patterns:
+            alive = np.ones(self.K, dtype=bool)
+            alive[list(dead)] = False
+            try:
+                self.decode_vector(alive)
+            except ValueError:
+                return False
+        return True
+
+
+def _ncr(n: int, r: int) -> int:
+    import math
+
+    return math.comb(n, r)
+
+
+def fractional_repetition_code(K: int, S: int) -> GradientCode:
+    """Fractional repetition scheme of [23] (requires (S+1) | K)."""
+    if S < 0 or S >= K:
+        raise ValueError(f"need 0 <= S < K, got K={K}, S={S}")
+    if K % (S + 1) != 0:
+        raise ValueError(
+            f"fractional repetition needs (S+1) | K; got K={K}, S={S}"
+        )
+    m = K // (S + 1)  # workers per group
+    B = np.zeros((K, K))
+    for g in range(S + 1):  # group index
+        for j in range(m):  # member index within group
+            worker = g * m + j
+            parts = np.arange(j * (S + 1), (j + 1) * (S + 1))
+            B[worker, parts] = 1.0
+    return GradientCode("fractional", K, S, B)
+
+
+def cyclic_repetition_code(
+    K: int, S: int, seed: int = 0, max_tries: int = 16
+) -> GradientCode:
+    """Cyclic repetition scheme of [23] (randomized construction, certified).
+
+    ECN j covers partitions {j, ..., j+S} (mod K) with random coefficients;
+    we rescale rows so that B @ 1 = (S+1)-ish is irrelevant — decodability is
+    what is certified via :meth:`GradientCode.verify`.
+    """
+    if S < 0 or S >= K:
+        raise ValueError(f"need 0 <= S < K, got K={K}, S={S}")
+    if S == 0:
+        return GradientCode("cyclic", K, 0, np.eye(K))
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        # H in R^{S x K} with H @ 1 = 0; rowspan(B) = null(H) which contains
+        # the all-ones vector (Tandon et al., randomized construction).
+        H = rng.standard_normal((S, K))
+        H[:, -1] -= H.sum(axis=1)
+        B = np.zeros((K, K))
+        ok = True
+        for j in range(K):
+            cols = (j + np.arange(S + 1)) % K
+            Hs = H[:, cols]  # (S, S+1): 1-dim null space generically
+            _, sv, Vt = np.linalg.svd(Hs)
+            if S > 0 and sv[-1] < 1e-10:
+                ok = False  # degenerate draw; retry
+                break
+            coef = Vt[-1]  # null vector of Hs
+            # Scale so that coefficients sum to S+1 (matches the uncoded
+            # convention where each row "covers" S+1 partitions; any nonzero
+            # scale works for decodability).
+            ssum = coef.sum()
+            if abs(ssum) < 1e-10:
+                ok = False
+                break
+            coef = coef * ((S + 1) / ssum)
+            B[j, cols] = coef
+        if not ok:
+            continue
+        code = GradientCode("cyclic", K, S, B)
+        if code.verify():
+            return code
+    raise RuntimeError(
+        f"failed to draw a decodable cyclic code for K={K}, S={S}"
+    )
+
+
+def uncoded(K: int) -> GradientCode:
+    """Disjoint allocation (sI-ADMM, Algorithm 1): B = I, must wait for all."""
+    return GradientCode("uncoded", K, 0, np.eye(K))
+
+
+def paper_fig2_code() -> GradientCode:
+    """The exact (K=3, S=1) example of the paper's Fig. 2."""
+    B = np.array(
+        [
+            [0.5, 1.0, 0.0],
+            [0.0, 1.0, -1.0],
+            [0.5, 0.0, 1.0],
+        ]
+    )
+    return GradientCode("cyclic", 3, 1, B)
+
+
+def make_code(scheme: str, K: int, S: int, seed: int = 0) -> GradientCode:
+    """Factory: scheme in {"fractional", "cyclic", "uncoded"}."""
+    if scheme == "fractional":
+        return fractional_repetition_code(K, S)
+    if scheme == "cyclic":
+        return cyclic_repetition_code(K, S, seed=seed)
+    if scheme == "uncoded":
+        if S != 0:
+            raise ValueError("uncoded scheme tolerates no stragglers (S=0)")
+        return uncoded(K)
+    raise ValueError(f"unknown scheme {scheme!r}")

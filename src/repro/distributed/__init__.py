@@ -1,0 +1,18 @@
+"""Distributed runtime: sharding rules, plain FSDP x TP steps, and the
+paper's csI-ADMM consensus runtime as a first-class mesh feature."""
+
+from .consensus import ConsensusConfig, ConsensusRuntime, make_consensus_mesh
+from .plain import PlainRuntime
+from .sharding import AxisLayout, auto_spec, batch_specs, cache_specs, tree_specs
+
+__all__ = [
+    "ConsensusConfig",
+    "ConsensusRuntime",
+    "make_consensus_mesh",
+    "PlainRuntime",
+    "AxisLayout",
+    "auto_spec",
+    "batch_specs",
+    "cache_specs",
+    "tree_specs",
+]

@@ -1,0 +1,115 @@
+"""Plain FSDP x TP training / serving steps (the non-consensus baseline).
+
+These are what the 40 (arch x shape) dry-run baselines lower: a standard
+Adam training step for `train_*` shapes, prefill for `prefill_*`, and one
+cached decode step for `decode_*` shapes. The consensus runtime
+(`repro.distributed.consensus`) is the paper's technique layered on the
+same sharding rules.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.optim import adam_init, adam_update, clip_by_global_norm
+
+from .sharding import AxisLayout, batch_specs, cache_specs, tree_specs
+
+__all__ = ["PlainRuntime"]
+
+
+class PlainRuntime:
+    """Sharded train/prefill/decode steps for one (model, mesh)."""
+
+    def __init__(self, model, mesh: Mesh, lr: float = 3e-4):
+        self.model = model
+        self.mesh = mesh
+        data = tuple(a for a in mesh.axis_names if a != "model")
+        self.layout = AxisLayout(mesh, data=data, model="model")
+        self.lr = lr
+
+    # -- abstract state -------------------------------------------------------
+
+    def params_shape(self) -> Any:
+        return jax.eval_shape(lambda: self.model.init(jax.random.key(0)))
+
+    def train_state_shape(self) -> Any:
+        p = self.params_shape()
+        return {"params": p, "opt": jax.eval_shape(adam_init, p)}
+
+    def state_specs(self, state_shape: Any) -> Any:
+        # Adam moments inherit their parameter's spec (same shapes).
+        return tree_specs(state_shape, self.layout)
+
+    # -- steps ------------------------------------------------------------------
+
+    def train_step(self, state: Any, batch: Any) -> Tuple[Any, dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            self.model.loss, has_aux=True
+        )(state["params"], batch)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        params, opt = adam_update(state["params"], grads, state["opt"], self.lr)
+        return {"params": params, "opt": opt}, {
+            "loss": loss,
+            "nll": metrics["nll"],
+            "grad_norm": gn,
+        }
+
+    def prefill_step(self, params: Any, batch: Any) -> Tuple[jax.Array, Any]:
+        kwargs = {}
+        if "extra_embeds" in batch:
+            kwargs["extra_embeds"] = batch["extra_embeds"]
+        return self.model.prefill(params, batch["tokens"], **kwargs)
+
+    def serve_step(self, params: Any, cache: Any, token: jax.Array):
+        return self.model.decode(params, cache, token)
+
+    # -- lowering ------------------------------------------------------------
+
+    def _ns(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def lower_train(self, batch_shape: Any):
+        state_shape = self.train_state_shape()
+        sspec = self.state_specs(state_shape)
+        bspec = batch_specs(batch_shape, self.layout)
+        with self.mesh:
+            return jax.jit(
+                self.train_step,
+                in_shardings=(self._ns(sspec), self._ns(bspec)),
+                out_shardings=(self._ns(sspec), None),
+            ).lower(state_shape, batch_shape)
+
+    def lower_prefill(self, batch_shape: Any):
+        pshape = self.params_shape()
+        pspec = tree_specs(pshape, self.layout)
+        bspec = batch_specs(batch_shape, self.layout)
+        with self.mesh:
+            return jax.jit(
+                self.prefill_step,
+                in_shardings=(self._ns(pspec), self._ns(bspec)),
+            ).lower(pshape, batch_shape)
+
+    def lower_decode(self, cache_shape: Any, token_shape: Any):
+        pshape = self.params_shape()
+        pspec = tree_specs(pshape, self.layout)
+        cspec = cache_specs(cache_shape, self.layout)
+        tspec = batch_specs({"token": token_shape}, self.layout)["token"]
+        with self.mesh:
+            return jax.jit(
+                self.serve_step,
+                in_shardings=(
+                    self._ns(pspec),
+                    self._ns(cspec),
+                    NamedSharding(self.mesh, tspec),
+                ),
+                out_shardings=(None, self._ns(cspec)),
+            ).lower(pshape, cache_shape, token_shape)

@@ -1,0 +1,141 @@
+"""Sharding inference: FSDP x TP specs for arbitrary model pytrees.
+
+One greedy rule drives every architecture (the assigned configs have wildly
+different divisibility patterns — vocab 50280 doesn't divide 16, head counts
+range 1..128 — so hand-written per-arch rules would be 10x the code and
+still miss the reduced smoke variants):
+
+  * "model" (TP) claims the RIGHTMOST dim divisible by its mesh size
+    (weights are (.., D_in, D_out): sharding D_out gives column-parallel
+    matmuls feeding row-parallel next layers — XLA SPMD inserts the psum);
+  * the data axes (FSDP) claim the LEFTMOST remaining divisible dim,
+    skipping dim 0 of stacked-layer arrays (ndim >= 3) so the lax.scan over
+    layers never crosses a partition boundary;
+  * dims that divide nothing stay replicated (e.g. mamba2's vocab 50280).
+
+`auto_spec` is deliberately shape-only: it runs on ShapeDtypeStructs in the
+dry-run without touching device state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "auto_spec",
+    "tree_specs",
+    "batch_specs",
+    "cache_specs",
+    "AxisLayout",
+]
+
+
+class AxisLayout:
+    """Which mesh axes play which role for a given runtime.
+
+    data axes may be a tuple (e.g. ("pod", "data") for fully-flat DP, or
+    ("data",) with "pod" reserved as the consensus agent axis).
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        data: Sequence[str] = ("data",),
+        model: str = "model",
+        agent: Optional[str] = None,
+    ):
+        self.mesh = mesh
+        self.data = tuple(data)
+        self.model = model
+        self.agent = agent
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.data_size = int(np.prod([sizes[a] for a in self.data]))
+        self.model_size = sizes[model]
+        self.agent_size = sizes[agent] if agent else 1
+
+    def dp_spec(self) -> P:
+        """Batch-dim spec over all data axes (agent axis first if present)."""
+        axes = ((self.agent,) if self.agent else ()) + self.data
+        return P(axes)
+
+
+def auto_spec(
+    shape: Tuple[int, ...],
+    layout: AxisLayout,
+    *,
+    skip_layer_dim: bool = True,
+    leading: Tuple[Optional[str], ...] = (),
+) -> P:
+    """Greedy FSDP x TP PartitionSpec for one array shape.
+
+    ``leading`` pins specs for leading dims (e.g. ("agent",) for consensus
+    x/y pytrees); the rule applies to the remaining dims.
+    """
+    n = len(shape)
+    spec: list = [None] * n
+    for i, ax in enumerate(leading):
+        spec[i] = ax
+    lo = len(leading)
+    if n - lo == 0:
+        return P(*spec)
+    assigned = set()
+    # TP: rightmost divisible dim.
+    if layout.model_size > 1:
+        for i in range(n - 1, lo - 1, -1):
+            if shape[i] % layout.model_size == 0 and shape[i] >= layout.model_size:
+                spec[i] = layout.model
+                assigned.add(i)
+                break
+    # FSDP: leftmost remaining divisible dim (skip stacked-layer dim 0).
+    first = lo + (1 if (skip_layer_dim and n - lo >= 3) else 0)
+    if layout.data_size > 1:
+        for i in range(first, n):
+            if i in assigned:
+                continue
+            if shape[i] % layout.data_size == 0 and shape[i] >= layout.data_size:
+                spec[i] = layout.data if len(layout.data) > 1 else layout.data[0]
+                break
+    return P(*spec)
+
+
+def tree_specs(
+    tree: Any,
+    layout: AxisLayout,
+    *,
+    leading: Tuple[Optional[str], ...] = (),
+) -> Any:
+    """PartitionSpecs for every leaf of an (abstract or concrete) pytree."""
+    return jax.tree.map(
+        lambda leaf: auto_spec(np.shape(leaf), layout, leading=leading), tree
+    )
+
+
+def batch_specs(batch: Any, layout: AxisLayout) -> Any:
+    """Batch dict: dim 0 over all data axes, rest replicated."""
+    dp = layout.dp_spec()
+
+    def spec(leaf):
+        shape = np.shape(leaf)
+        total = layout.data_size * layout.agent_size
+        if shape and shape[0] % total == 0 and shape[0] >= total:
+            return P(dp[0], *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache: Any, layout: AxisLayout) -> Any:
+    """KV/state caches: batch dim (dim 1 of (L, B, ...) leaves) over data,
+    TP on the rightmost divisible dim; scalars replicated."""
+
+    def spec(leaf):
+        shape = np.shape(leaf)
+        if len(shape) <= 1:
+            return P(*([None] * len(shape)))
+        return auto_spec(shape, layout)
+
+    return jax.tree.map(spec, cache)

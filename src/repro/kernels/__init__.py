@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True).
+
+  coded_combine / coded_admm_update — fused MDS gradient decode (+ eq. 5a
+      x-update): the csI-ADMM agent-side hot spot (memory-bound reduce).
+  flash_attention — blocked online-softmax attention (causal / sliding
+      window / GQA via index maps) for the transformer archs.
+  ssd_scan — Mamba-2 chunked state-space-duality scan (mamba2-1.3b).
+  rglru_scan — RG-LRU linear recurrence via in-kernel doubling scan
+      (recurrentgemma-9b).
+
+`ops` are the jitted public entry points; `ref` holds the pure-jnp oracles
+the tests sweep against.
+"""
+
+from .ops import (
+    coded_admm_update,
+    coded_combine,
+    flash_attention,
+    rglru_scan,
+    ssd_scan,
+)
+
+__all__ = [
+    "coded_combine",
+    "coded_admm_update",
+    "flash_attention",
+    "ssd_scan",
+    "rglru_scan",
+]

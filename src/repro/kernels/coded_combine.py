@@ -1,0 +1,112 @@
+"""Fused MDS decode-combine (+ ADMM x-update) Pallas TPU kernel.
+
+The csI-ADMM hot spot on the agent: combine the J coded gradient messages
+with the decode vector a (eq. 6, `q_dec`), then apply the proximal
+linearized x-update (eq. 5a). Unfused, that is J + 4 HBM passes over
+n = |params| floats; fused it is one read of (J+3)·n and one write of n —
+strictly memory-bound, so the win is exactly the eliminated passes.
+
+Tiling: grid over n in ``block_n`` chunks; each step holds a (J, block_n)
+tile of messages plus (1, block_n) tiles of x/y/z in VMEM. J is tiny (= K
+ECNs, 3..16) so VMEM footprint ~ (J+4)·block_n·4B — block_n = 16384 at
+J = 16 is ~1.3 MB, well inside the ~16 MB/core budget, and the last-dim
+tile is a multiple of 128 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["coded_combine_kernel", "coded_admm_update_kernel"]
+
+DEFAULT_BLOCK_N = 16_384
+
+
+def _combine_body(msgs_ref, coeffs_ref, out_ref):
+    m = msgs_ref[...].astype(jnp.float32)  # (J, bn)
+    c = coeffs_ref[...].astype(jnp.float32)  # (J, 1)
+    out_ref[...] = jnp.sum(m * c, axis=0, keepdims=True)
+
+
+def coded_combine_kernel(
+    msgs: jax.Array,  # (J, n) — n a multiple of block_n (ops.py pads)
+    coeffs: jax.Array,  # (J,)
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """out (n,) f32 = sum_j coeffs[j] * msgs[j]."""
+    J, n = msgs.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _combine_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((J, block_n), lambda i: (0, i)),
+            pl.BlockSpec((J, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+        name="coded_combine",
+    )(msgs, coeffs.reshape(J, 1))
+    return out[0]
+
+
+def _admm_body(msgs_ref, coeffs_ref, x_ref, y_ref, z_ref, scal_ref, out_ref):
+    m = msgs_ref[...].astype(jnp.float32)  # (J, bn)
+    c = coeffs_ref[...].astype(jnp.float32)  # (J, 1)
+    G = jnp.sum(m * c, axis=0, keepdims=True)  # (1, bn)
+    tau = scal_ref[0, 0]
+    rho = scal_ref[0, 1]
+    num = (
+        tau * x_ref[...].astype(jnp.float32)
+        + rho * z_ref[...].astype(jnp.float32)
+        + y_ref[...].astype(jnp.float32)
+        - G
+    )
+    out_ref[...] = (num / (rho + tau)).astype(out_ref.dtype)
+
+
+def coded_admm_update_kernel(
+    msgs: jax.Array,  # (J, n)
+    coeffs: jax.Array,  # (J,)
+    x: jax.Array,  # (n,)
+    y: jax.Array,  # (n,)
+    z: jax.Array,  # (n,)
+    tau: jax.Array,  # scalar
+    rho: float,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused decode + eq. (5a): x+ = (tau x + rho z + y - a.msgs)/(rho+tau)."""
+    J, n = msgs.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    scal = jnp.stack(
+        [jnp.asarray(tau, jnp.float32), jnp.asarray(rho, jnp.float32)]
+    ).reshape(1, 2)
+    row = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    out = pl.pallas_call(
+        _admm_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((J, block_n), lambda i: (0, i)),
+            pl.BlockSpec((J, 1), lambda i: (0, 0)),
+            row,
+            row,
+            row,
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=interpret,
+        name="coded_admm_update",
+    )(msgs, coeffs.reshape(J, 1), x[None], y[None], z[None], scal)
+    return out[0]

@@ -1,0 +1,151 @@
+"""Blocked (flash) attention Pallas TPU kernel: causal, sliding-window, GQA.
+
+Grid (B, H, nq, nk), nk innermost; online-softmax accumulators (acc, m, l)
+live in VMEM scratch and persist across the nk sweep. GQA is handled in the
+K/V BlockSpec index maps (query head h reads kv head h*KV//H), so grouped
+K/V are never materialized at H width — on TPU this keeps the K/V HBM
+traffic at KV/H of the expanded version.
+
+Blocks fully outside the causal/window band contribute nothing: the kernel
+still visits them (TPU grids are static) but skips the matmuls under
+``pl.when``, so the MXU work matches the band's true FLOP count.
+
+Block shapes: (block_q, hd) and (block_kv, hd) tiles — hd is 64/128 in every
+assigned config and block sizes default to 128/256, all lane-aligned.
+VMEM: q + k + v + acc ≈ (bq + 2·bkv + bq)·hd·4B ≈ 0.5 MB at defaults.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel"]
+
+NEG_INF = -1e30
+
+
+def _body(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+    q_offset: int,
+    sm_scale: float,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-level band test (static offsets, dynamic block ids).
+    q_lo = qi * block_q + q_offset  # first query position in block
+    q_hi = q_lo + block_q - 1
+    k_lo = ki * block_kv
+    k_hi = k_lo + block_kv - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window is not None:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T  # (bq, bkv)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]  # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = (l_ref[...][:, 0] * alpha + p.sum(axis=-1))[:, None]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)  # (bq, 1)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, KV, Skv, hd)
+    v: jax.Array,  # (B, KV, Skv, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (Sq, Skv, block_q, block_kv)
+    nq, nk = Sq // block_q, Skv // block_kv
+    grid = (B, H, nq, nk)
+    kv_of = lambda h: h * KV // H
+
+    body = functools.partial(
+        _body,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv=nk,
+        q_offset=q_offset,
+        sm_scale=1.0 / (hd**0.5),
+    )
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, hd), lambda b, h, i, j: (b, kv_of(h), j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, hd), lambda b, h, i, j: (b, kv_of(h), j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l (running denom)
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

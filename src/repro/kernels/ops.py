@@ -1,0 +1,183 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Each op pads/reshapes to kernel-legal tiles, dispatches the kernel
+(interpret=True automatically off-TPU so the same call sites work in this
+CPU container), and restores the caller's layout. These are the functions
+the models/runtime call; tests sweep them against `repro.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .coded_combine import coded_admm_update_kernel, coded_combine_kernel
+from .flash_attention import flash_attention_kernel
+from .rglru_scan import rglru_scan_kernel
+from .ssd_scan import ssd_scan_kernel
+
+__all__ = [
+    "coded_combine",
+    "coded_admm_update",
+    "flash_attention",
+    "ssd_scan",
+    "rglru_scan",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return (n + mult - 1) // mult * mult
+
+
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def coded_combine(
+    msgs: jax.Array, coeffs: jax.Array, *, block_n: int = 4096
+) -> jax.Array:
+    """sum_j coeffs[j]*msgs[j] over flat message rows. msgs (J, n)."""
+    J, n = msgs.shape
+    n_pad = _pad_to(n, block_n)
+    if n_pad != n:
+        msgs = jnp.pad(msgs, ((0, 0), (0, n_pad - n)))
+    out = coded_combine_kernel(
+        msgs, coeffs, block_n=block_n, interpret=_interpret()
+    )
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block_n"))
+def coded_admm_update(
+    msgs: jax.Array,
+    coeffs: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    z: jax.Array,
+    tau: jax.Array,
+    rho: float,
+    *,
+    block_n: int = 4096,
+) -> jax.Array:
+    """Fused decode + eq. (5a) x-update over flat parameter vectors."""
+    J, n = msgs.shape
+    n_pad = _pad_to(n, block_n)
+    if n_pad != n:
+        pad = ((0, 0), (0, n_pad - n))
+        msgs = jnp.pad(msgs, pad)
+        x = jnp.pad(x, (0, n_pad - n))
+        y = jnp.pad(y, (0, n_pad - n))
+        z = jnp.pad(z, (0, n_pad - n))
+    out = coded_admm_update_kernel(
+        msgs, coeffs, x, y, z, tau, rho, block_n=block_n, interpret=_interpret()
+    )
+    return out[:n]
+
+
+# --------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "block_q", "block_kv")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd) — model layout
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 256,
+) -> jax.Array:
+    """Flash attention in the model's (B, S, H, hd) layout, GQA-aware."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq) if Sq % block_q else block_q
+    bkv = min(block_kv, Skv) if Skv % block_kv else block_kv
+    # Fall back to legal tile sizes for short sequences.
+    while Sq % bq:
+        bq //= 2
+    while Skv % bkv:
+        bkv //= 2
+    out = flash_attention_kernel(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        block_q=bq,
+        block_kv=bkv,
+        interpret=_interpret(),
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan; pads S to a chunk multiple with dt=0 identity steps."""
+    B, S, H, P = x.shape
+    S_pad = _pad_to(S, chunk)
+    if S_pad != S:
+        pad = S_pad - S
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_scan_kernel(
+        x,
+        dt.astype(jnp.float32),
+        A.astype(jnp.float32),
+        Bm,
+        Cm,
+        chunk=chunk,
+        interpret=_interpret(),
+    )
+    return y[:, :S], h
+
+
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w"))
+def rglru_scan(
+    a: jax.Array,  # (B, S, W)
+    b: jax.Array,  # (B, S, W)
+    h0: Optional[jax.Array] = None,  # (B, W)
+    *,
+    block_s: int = 256,
+    block_w: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t (RG-LRU inner scan)."""
+    B, S, W = a.shape
+    if h0 is not None:
+        # Fold initial state into step 0 (kernel starts from zero state).
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+    bs = block_s
+    while S % bs:
+        bs //= 2
+    S_pad = S  # bs always divides S after the loop (bs reaches 1 worst case)
+    h, hlast = rglru_scan_kernel(
+        a, b, block_s=bs, block_w=block_w, interpret=_interpret()
+    )
+    return h, hlast

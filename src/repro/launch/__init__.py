@@ -1,0 +1,5 @@
+"""Launchers: production meshes, multi-pod dry-run, train/serve CLIs."""
+
+from .mesh import HW, make_production_mesh
+
+__all__ = ["make_production_mesh", "HW"]

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init. Only this module forces 512 placeholder devices — tests and
+# benchmarks see the single real CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+For each combination this prints/collects:
+  - memory_analysis()  (per-device argument/output/temp/peak bytes),
+  - cost_analysis()    (XLA's numbers, recorded for reference — they count
+    lax.scan bodies ONCE and so under-report layer-stacked models),
+  - repro.launch.hlo_cost.analyze_hlo — trip-count-aware per-device FLOPs /
+    HBM bytes / collective bytes (all-gather, all-reduce, reduce-scatter,
+    all-to-all, collective-permute), the numbers the roofline uses,
+and writes one JSON record per combo consumed by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --consensus
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.configs.registry import input_specs, shape_applicable
+from repro.configs.shapes import SHAPES
+from repro.distributed import ConsensusConfig, ConsensusRuntime, PlainRuntime
+from repro.distributed.consensus import make_consensus_mesh
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import get_model
+
+
+def roofline_terms(
+    flops_dev: float, bytes_dev: float, coll_bytes_dev: float
+) -> dict:
+    """The three roofline terms in seconds. Inputs are PER-DEVICE numbers
+    (the compiled module is the SPMD per-device program), so no further
+    division by chip count: t = per_device_work / per_chip_rate, which
+    equals global_work / (chips * rate)."""
+    terms = {
+        "compute_s": flops_dev / HW.PEAK_BF16,
+        "memory_s": bytes_dev / HW.HBM_BW,
+        "collective_s": coll_bytes_dev / HW.ICI_BW,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    return terms
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    consensus: bool = False,
+    verbose: bool = True,
+    opts: str = "",
+    consensus_mode: str = "incremental",
+) -> Optional[dict]:
+    """opts: comma list of config overrides, e.g. "remat=full,attn_block_kv=2048"."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if opts:
+        overrides = {}
+        for kv in opts.split(","):
+            k, v = kv.split("=", 1)
+            cur = getattr(cfg, k)
+            overrides[k] = type(cur)(v) if cur is not None else v
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": skip}
+    model = get_model(cfg)
+    t0 = time.time()
+
+    if consensus:
+        if shape.kind != "train":
+            return None
+        mesh = make_consensus_mesh(2 if multi_pod else 4, multi_pod=multi_pod)
+        ccfg = ConsensusConfig(
+            n_agents=2 if multi_pod else 4, mode=consensus_mode
+        )
+        rt = ConsensusRuntime(model, ccfg, mesh)
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        batch = input_specs(cfg, shape)
+        lowered = rt.lower_train_step(batch, params_shape)
+        step_name = f"consensus_train[{ccfg.mode}]"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rt = PlainRuntime(model, mesh)
+        batch = input_specs(cfg, shape)
+        if shape.kind == "train":
+            lowered = rt.lower_train(batch)
+            step_name = "train"
+        elif shape.kind == "prefill":
+            lowered = rt.lower_prefill(batch)
+            step_name = "prefill"
+        else:
+            lowered = rt.lower_decode(batch["cache"], batch["token"])
+            step_name = "decode"
+
+    n_chips = int(np.prod(mesh.devices.shape))
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    xla_cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+    cost = analyze_hlo(compiled.as_text())
+    terms = roofline_terms(cost.flops, cost.bytes, cost.collective_bytes)
+
+    # model-level "useful" FLOPs: 6 N_active D tokens (training fwd+bwd) /
+    # 2 N_active D (serve fwd) per token.
+    n_params = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_params * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_params * tokens
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+        model_flops = 2.0 * n_params * tokens
+
+    flops_global = cost.flops * n_chips
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "step": step_name,
+        "opts": opts,
+        "multi_pod": multi_pod,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 1),
+        # per-device, trip-count-aware (roofline inputs)
+        "flops_dev": cost.flops,
+        "hbm_bytes_dev": cost.bytes,
+        "collective_bytes_dev": cost.collective_bytes,
+        "per_collective_dev": cost.per_collective,
+        "collective_counts": cost.collective_counts,
+        "unknown_trip_whiles": cost.unknown_trip_whiles,
+        # XLA's own (loop-bodies-once) numbers, for reference
+        "xla_flops_dev": float(xla_cost.get("flops", 0.0)),
+        "xla_bytes_dev": float(xla_cost.get("bytes accessed", 0.0)),
+        "memory": mem_d,
+        "model_flops": model_flops,
+        "useful_flop_frac": model_flops / flops_global if flops_global else None,
+        **terms,
+    }
+    if verbose:
+        print(json.dumps(rec, indent=None, default=str), flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--consensus", action="store_true",
+                    help="lower the csI-ADMM consensus train step instead")
+    ap.add_argument("--opts", default="",
+                    help='config overrides, e.g. "remat=full,attn_block_kv=2048"')
+    ap.add_argument("--consensus-mode", default="incremental",
+                    choices=("incremental", "parallel"))
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    records, skips, failures = [], [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                try:
+                    rec = run_one(arch, shape, mp, consensus=args.consensus,
+                                  opts=args.opts,
+                                  consensus_mode=args.consensus_mode)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((tag, repr(e)))
+                    continue
+                if rec is None:
+                    continue
+                if rec.get("skipped"):
+                    skips.append(rec)
+                    print(f"SKIP {tag}: {rec['skipped']}")
+                else:
+                    records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec, default=str) + "\n")
+
+    print(f"\n== dry-run complete: {len(records)} lowered, "
+          f"{len(skips)} skipped, {len(failures)} failures ==")
+    for tag, err in failures:
+        print(f"FAIL {tag}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

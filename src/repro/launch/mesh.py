@@ -1,0 +1,29 @@
+"""Production meshes (TPU v5e).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run forces 512 host devices BEFORE calling these).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) ("data", "model") = 256 chips.
+    Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+class HW:
+    """TPU v5e roofline constants (per chip)."""
+
+    PEAK_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # B/s
+    ICI_BW = 50e9  # B/s per link
+    HBM_BYTES = 16 * 2**30

@@ -1,0 +1,6 @@
+"""Model zoo: dense / MoE / SSM / hybrid / VLM / audio backbones in pure JAX."""
+
+from .config import ModelConfig
+from .registry import Model, get_model
+
+__all__ = ["ModelConfig", "Model", "get_model"]

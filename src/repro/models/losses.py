@@ -1,0 +1,39 @@
+"""Shared LM loss with optional per-row weights.
+
+Per-row weights are how the distributed csI-ADMM runtime expresses MDS
+encode/decode over ECN batch partitions: the gradient is linear in
+per-example losses, so "ECN j encodes sum_t B[j,t] g~_t, agent decodes
+sum_j a_j g_j" folds into one weighted backward pass with row weight
+a_j * B[j,t] (see repro.distributed.consensus).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lm_loss"]
+
+
+def lm_loss(
+    logits: jax.Array,  # (B, S, V) — any float dtype; promoted to f32
+    labels: jax.Array,  # (B, S) int, -100/-1 => ignore
+    row_weights: Optional[jax.Array] = None,  # (B,)
+) -> jax.Array:
+    """Mean token NLL; with row_weights, sum_b w_b * (mean token NLL of row b).
+
+    f_i in the paper is a mean over local examples; a "row" here is one
+    example, its loss the mean NLL over its (unmasked) positions.
+    """
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    lab = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    if row_weights is None:
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    row_loss = nll.sum(-1) / jnp.maximum(mask.sum(-1), 1)
+    return jnp.sum(row_weights.astype(jnp.float32) * row_loss)

@@ -1,0 +1,339 @@
+"""Mamba-2 (SSD, state-space duality) language model [arXiv:2405.21060].
+
+Block = in_proj -> causal depthwise conv (x, B, C) -> SSD -> gated RMSNorm
+-> out_proj, with the chunked SSD algorithm (intra-chunk dual/quadratic form
++ inter-chunk state recurrence via ``lax.scan``) for training/prefill and a
+constant-memory recurrent update for decode.
+
+Shapes: B batch, S seq, D d_model, di = expand*D inner, H ssm heads,
+P = di/H head dim, N ssm state, G groups (=1), Q chunk length.
+
+State cache: dict(ssm=(L, B, H, P, N) f32, conv=(L, B, W-1, conv_dim),
+len=scalar). The SSD state is the analogue of a KV cache with O(1) size —
+this is why mamba2 serves the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm
+
+# --------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim or di // H
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N  # x, B, C pass through the conv (G=1)
+    return di, H, P, N, conv_dim
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    cfg.validate()
+    dt = cfg.jnp_dtype
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    di, H, P, N, conv_dim = _dims(cfg)
+    W = cfg.conv_width
+    keys = iter(jax.random.split(rng, 16))
+
+    def w(key, *shape, scale=0.02):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+    # in_proj packs (z, x, B, C, dt): di + di + N + N + H columns.
+    layers = {
+        "ln": jnp.zeros((L, D), dt),
+        "w_in": w(next(keys), L, D, 2 * di + 2 * N + H),
+        "conv_w": w(next(keys), L, W, conv_dim, scale=0.2),
+        "conv_b": jnp.zeros((L, conv_dim), dt),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.linspace(1.0, 16.0, H), (L, H))
+        ).astype(jnp.float32),
+        "dt_bias": jnp.zeros((L, H), jnp.float32),
+        "D_skip": jnp.ones((L, H), jnp.float32),
+        "norm": jnp.zeros((L, di), dt),
+        "w_out": w(next(keys), L, di, D, scale=0.02 / max(L, 1) ** 0.5),
+    }
+    params = {
+        "embed": w(next(keys), V, D),
+        "layers": layers,
+        "final_norm": jnp.zeros((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = w(next(keys), D, V)
+    return params
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    sum_{j < t <= i} a[..., t], -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) — pre-multiplied by nothing; dt applied here
+    dt: jax.Array,  # (B, S, H) f32, post-softplus
+    A: jax.Array,  # (H,) f32, negative
+    Bm: jax.Array,  # (B, S, N) (G=1)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (Mamba-2 alg.): returns (y (B,S,H,P), final state)."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    S_orig = S
+    if S % Q != 0:
+        # Pad to a chunk multiple with dt = 0 steps: decay exp(0·A) = 1 and
+        # input x·dt = 0, so padded positions are identities on the state.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    a = dt * A[None, None, :]  # (B, S, H) log-decay per step
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(jnp.float32)
+
+    # reshape into chunks: (nc, B, Q, ...)
+    def chunked(t, feat_shape):
+        return t.reshape(B_, nc, Q, *feat_shape).transpose(1, 0, 2, *(i + 3 for i in range(len(feat_shape))))
+
+    ac = a.reshape(B_, nc, Q, H).transpose(1, 0, 2, 3)  # (nc,B,Q,H)
+    xc = xdt.reshape(B_, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    Bc = Bm.astype(jnp.float32).reshape(B_, nc, Q, N).transpose(1, 0, 2, 3)
+    Cc = Cm.astype(jnp.float32).reshape(B_, nc, Q, N).transpose(1, 0, 2, 3)
+
+    def per_chunk(carry, inp):
+        h = carry  # (B, H, P, N)
+        a_, x_, B_in, C_in = inp  # (B,Q,H), (B,Q,H,P), (B,Q,N), (B,Q,N)
+        a_t = a_.transpose(0, 2, 1)  # (B, H, Q)
+        cum = jnp.cumsum(a_t, axis=-1)  # (B, H, Q)
+        # Intra-chunk (dual quadratic form): Lmat (B,H,Q,Q)
+        Lmat = jnp.exp(_segsum(a_t))
+        scores = jnp.einsum("bin,bjn->bij", C_in, B_in)  # (B,Q,Q)
+        y_intra = jnp.einsum(
+            "bij,bhij,bjhp->bihp", scores, Lmat, x_
+        )
+        # Contribution of the carried-in state: y_inter[i] = C_i h * exp(cum_i)
+        y_inter = jnp.einsum(
+            "bin,bhpn,bhi->bihp", C_in, h, jnp.exp(cum)
+        )
+        # Chunk-final state: h' = h * exp(cum_Q) + sum_j exp(cum_Q - cum_j) B_j x_j
+        decay_out = jnp.exp(cum[..., -1:] - cum)  # (B, H, Q)
+        h_new = h * jnp.exp(cum[..., -1])[..., None, None] + jnp.einsum(
+            "bjn,bhj,bjhp->bhpn", B_in, decay_out, x_
+        )
+        return h_new, y_intra + y_inter
+
+    h0 = (
+        jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    h_final, yc = jax.lax.scan(per_chunk, h0, (ac, xc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, P)
+    return y[:, :S_orig], h_final
+
+
+def ssd_decode(
+    x: jax.Array,  # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, 1, N)
+    Cm: jax.Array,  # (B, 1, N)
+    h: jax.Array,  # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-step recurrence: h = exp(dt*A) h + (dt*x) outer B; y = C.h"""
+    a = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+    xdt = (x[:, 0].astype(jnp.float32) * dt[:, 0, :, None])
+    h_new = a * h + jnp.einsum("bhp,bn->bhpn", xdt, Bm[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm[:, 0].astype(jnp.float32))
+    return y[:, None], h_new
+
+
+# --------------------------------------------------------------------------
+# Block plumbing
+# --------------------------------------------------------------------------
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. seq (B, S, C), w (W, C)."""
+    B, S, C = seq.shape
+    W = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # (W, 1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return (out + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+def _split_proj(cfg, proj):
+    di, H, P, N, conv_dim = _dims(cfg)
+    z, xBC, dt = jnp.split(proj, [di, di + conv_dim], axis=-1)
+    return z, xBC, dt  # xBC = (x | B | C) pre-conv
+
+
+def _block_seq(cfg: ModelConfig, lp: dict, u: jax.Array) -> jax.Array:
+    """Full-sequence mamba2 block (pre-norm residual)."""
+    di, H, P, N, conv_dim = _dims(cfg)
+    B_, S, D = u.shape
+    h = rmsnorm(u, lp["ln"])
+    z, xBC, dt_raw = _split_proj(cfg, h @ lp["w_in"])
+    xBC = jax.nn.silu(_causal_conv(xBC, lp["conv_w"], lp["conv_b"]))
+    x, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + lp["dt_bias"][None, None]
+    )
+    A = -jnp.exp(lp["A_log"])  # (H,)
+    if cfg.ssm_impl == "pallas":
+        from repro.kernels import ssd_scan as _ssd
+
+        y, _ = _ssd(
+            x.reshape(B_, S, H, P), dt, A, Bm, Cm, chunk=cfg.ssm_chunk
+        )
+    else:
+        y, _ = ssd_chunked(
+            x.reshape(B_, S, H, P), dt, A, Bm, Cm, cfg.ssm_chunk
+        )
+    y = y + lp["D_skip"][None, None, :, None] * x.reshape(B_, S, H, P).astype(jnp.float32)
+    y = y.reshape(B_, S, di).astype(u.dtype)
+    y = rmsnorm(y, lp["norm"]) * jax.nn.silu(z)
+    return u + y @ lp["w_out"]
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, extra_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    from .layers import maybe_remat
+
+    x = params["embed"][tokens]
+
+    def block(x, lp):
+        return _block_seq(cfg, lp, x), None
+
+    x, _ = jax.lax.scan(maybe_remat(block, cfg.remat), x, params["layers"])
+    x = rmsnorm(x, params["final_norm"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    from .losses import lm_loss
+
+    hidden, _ = forward(cfg, params, batch["tokens"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    loss = lm_loss(hidden @ head, batch["labels"], batch.get("loss_weights"))
+    return loss, {"nll": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, seq_len: int) -> dict:
+    """SSM state + conv tail — O(1) in seq_len (why long_500k works)."""
+    di, H, P, N, conv_dim = _dims(cfg)
+    L, W = cfg.n_layers, cfg.conv_width
+    return {
+        "ssm": jnp.zeros((L, B, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, B, W - 1, conv_dim), cfg.jnp_dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    extra_embeds=None,
+    extra_slots: int = 0,  # accepted for API uniformity; state is O(1)
+):
+    """Prompt pass returning last logits + recurrent state cache."""
+    di, H, P, N, conv_dim = _dims(cfg)
+    B_, S = tokens.shape
+    x = params["embed"][tokens]
+
+    def block(x, lp):
+        u = x
+        h = rmsnorm(u, lp["ln"])
+        z, xBC, dt_raw = _split_proj(cfg, h @ lp["w_in"])
+        conv_tail = xBC[:, S - (cfg.conv_width - 1) :, :]
+        xBC = jax.nn.silu(_causal_conv(xBC, lp["conv_w"], lp["conv_b"]))
+        xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + lp["dt_bias"][None, None]
+        )
+        A = -jnp.exp(lp["A_log"])
+        y, h_fin = ssd_chunked(
+            xs.reshape(B_, S, H, P), dt, A, Bm, Cm, cfg.ssm_chunk
+        )
+        y = y + lp["D_skip"][None, None, :, None] * xs.reshape(B_, S, H, P).astype(jnp.float32)
+        y = y.reshape(B_, S, di).astype(u.dtype)
+        y = rmsnorm(y, lp["norm"]) * jax.nn.silu(z)
+        return u + y @ lp["w_out"], (h_fin, conv_tail)
+
+    x, (ssm, conv) = jax.lax.scan(block, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x[:, -1:] @ head
+    return logits, {"ssm": ssm, "conv": conv, "len": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
+    di, H, P, N, conv_dim = _dims(cfg)
+    B_ = token.shape[0]
+    x = params["embed"][token]  # (B, 1, D)
+    W = cfg.conv_width
+
+    def block(x, layer):
+        lp, h_ssm, conv_tail = layer
+        u = x
+        h = rmsnorm(u, lp["ln"])
+        z, xBC, dt_raw = _split_proj(cfg, h @ lp["w_in"])  # (B,1,*)
+        # conv over [tail | current]
+        window = jnp.concatenate([conv_tail, xBC], axis=1)  # (B, W, conv)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", window.astype(jnp.float32), lp["conv_w"].astype(jnp.float32)
+        ) + lp["conv_b"].astype(jnp.float32)
+        xBC = jax.nn.silu(conv_out)[:, None].astype(u.dtype)
+        xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + lp["dt_bias"][None, None]
+        )
+        A = -jnp.exp(lp["A_log"])
+        y, h_new = ssd_decode(
+            xs.reshape(B_, 1, H, P), dt, A, Bm, Cm, h_ssm
+        )
+        y = y + lp["D_skip"][None, None, :, None] * xs.reshape(B_, 1, H, P).astype(jnp.float32)
+        y = y.reshape(B_, 1, di).astype(u.dtype)
+        y = rmsnorm(y, lp["norm"]) * jax.nn.silu(z)
+        out = u + y @ lp["w_out"]
+        return out, (h_new, window[:, 1:])
+
+    x, (ssm, conv) = jax.lax.scan(
+        block, x, (params["layers"], cache["ssm"], cache["conv"])
+    )
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, {"ssm": ssm, "conv": conv, "len": cache["len"] + 1}

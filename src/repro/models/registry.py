@@ -1,0 +1,53 @@
+"""Uniform model API over all families.
+
+``get_model(cfg)`` returns a `Model` whose members are pure functions:
+
+  init(rng) -> params
+  loss(params, batch) -> (loss, metrics)          # train step objective
+  prefill(params, tokens[, extra_embeds]) -> (logits, cache)
+  decode(params, cache, token) -> (logits, cache)
+  init_cache(B, seq_len) -> cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+from . import mamba2, rglru, transformer, whisper
+from .config import ModelConfig
+
+__all__ = ["Model", "get_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": rglru,
+    "audio": whisper,
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILIES[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=partial(mod.init, cfg),
+        loss=partial(mod.loss_fn, cfg),
+        prefill=partial(mod.prefill, cfg),
+        decode=partial(mod.decode_step, cfg),
+        init_cache=partial(mod.init_cache, cfg),
+    )

@@ -1,0 +1,417 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrence + local attention
+[arXiv:2402.19427].
+
+Layer pattern is 1 local-attention layer per ``attn_every`` layers
+(RG uses 1:2 — pattern [rec, rec, attn] repeating). We scan over groups of
+``attn_every`` layers (rec params stacked (G, R, ...), attn params (G, ...))
+plus an unscanned tail of ``n_layers % attn_every`` recurrent layers, which
+preserves the exact interleaving for any n_layers.
+
+RG-LRU (per channel):
+  r_t = sigmoid(x_t W_a + b_a)          recurrence gate
+  i_t = sigmoid(x_t W_x + b_x)          input gate
+  log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+computed with ``jax.lax.associative_scan`` (parallel prefix) over the
+sequence — the TPU-native formulation of the recurrence (vs. the GPU
+sequential kernel in the reference implementation).
+
+Recurrent state + windowed KV cache are O(window) — serves long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    _z,
+    _expand_kv,
+    apply_rope,
+    blocked_attention,
+    decode_attention,
+    mlp_apply,
+    naive_attention,
+    rmsnorm,
+)
+
+_C_RGLRU = 8.0
+
+
+def _counts(cfg: ModelConfig):
+    G = cfg.n_layers // cfg.attn_every
+    R = cfg.attn_every - 1
+    T = cfg.n_layers % cfg.attn_every  # tail recurrent layers
+    return G, R, T
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    cfg.validate()
+    dt = cfg.jnp_dtype
+    D, V, F = cfg.d_model, cfg.vocab, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    Wl, cw = cfg.lru_width, cfg.conv_width
+    G, R, T = _counts(cfg)
+    k = iter(jax.random.split(rng, 64))
+
+    def w(key, *shape, scale=0.02):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+    def mlp(n):
+        return {
+            "ln2": jnp.zeros((*n, D), dt),
+            "w_gate": w(next(k), *n, D, F),
+            "w_up": w(next(k), *n, D, F),
+            "w_down": w(next(k), *n, F, D, scale=0.005),
+        }
+
+    def rec(n):
+        return {
+            "ln": jnp.zeros((*n, D), dt),
+            "w_x": w(next(k), *n, D, Wl),
+            "w_gate_in": w(next(k), *n, D, Wl),
+            "conv_w": w(next(k), *n, cw, Wl, scale=0.2),
+            "conv_b": jnp.zeros((*n, Wl), dt),
+            "lru_wa": w(next(k), *n, Wl, Wl),
+            "lru_ba": jnp.full((*n, Wl), 2.0, jnp.float32),
+            "lru_wx": w(next(k), *n, Wl, Wl),
+            "lru_bx": jnp.zeros((*n, Wl), jnp.float32),
+            "lambda": jnp.full((*n, Wl), 1.0, jnp.float32),
+            "w_out": w(next(k), *n, Wl, D, scale=0.005),
+            **mlp(n),
+        }
+
+    def attn(n):
+        return {
+            "ln": jnp.zeros((*n, D), dt),
+            "wq": w(next(k), *n, D, H * hd),
+            "wk": w(next(k), *n, D, KV * hd),
+            "wv": w(next(k), *n, D, KV * hd),
+            "wo": w(next(k), *n, H * hd, D, scale=0.005),
+            **mlp(n),
+        }
+
+    params = {
+        "embed": w(next(k), V, D),
+        "rec": rec((G, R)),
+        "attn": attn((G,)),
+        "final_norm": jnp.zeros((D,), dt),
+    }
+    if T:
+        params["tail_rec"] = rec((T,))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = w(next(k), D, V)
+    return params
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+
+def _gates(lp, x):  # x (B, S, Wl)
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ lp["lru_wa"].astype(jnp.float32) + lp["lru_ba"])
+    i = jax.nn.sigmoid(xf @ lp["lru_wx"].astype(jnp.float32) + lp["lru_bx"])
+    log_a = -_C_RGLRU * jax.nn.softplus(lp["lambda"]) * r  # (B,S,Wl)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_seq(lp: dict, x: jax.Array, h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Parallel linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    x: (B, S, Wl); h0: (B, Wl) carried state. Returns (h_seq, h_last)."""
+    a, b = _gates(lp, x)
+    # Fold the initial state into the first step: b_1 += a_1 * h0.
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hs.astype(x.dtype), hs[:, -1]
+
+
+def rglru_step(lp: dict, x: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x: (B, 1, Wl), h: (B, Wl) f32."""
+    a, b = _gates(lp, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    B, S, C = seq.shape
+    W = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return (out + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blocks (full sequence)
+# --------------------------------------------------------------------------
+
+
+def _rec_block_seq(cfg, lp, x, h0=None):
+    B, S, D = x.shape
+    h = rmsnorm(x, lp["ln"])
+    gate = jax.nn.gelu((h @ lp["w_gate_in"]).astype(jnp.float32)).astype(x.dtype)
+    xb = h @ lp["w_x"]
+    xb = _causal_conv(xb, lp["conv_w"], lp["conv_b"])
+    if h0 is None:
+        h0 = jnp.zeros((B, cfg.lru_width), jnp.float32)
+    if cfg.ssm_impl == "pallas":
+        from repro.kernels import rglru_scan as _rglru
+
+        a, bb = _gates(lp, xb)
+        hs, h_last = _rglru(a, bb, h0)
+        ys = hs.astype(xb.dtype)
+    else:
+        ys, h_last = rglru_seq(lp, xb, h0)
+    out = (ys * gate) @ lp["w_out"]
+    x = x + out
+    # MLP
+    h2 = rmsnorm(x, lp["ln2"])
+    x = x + mlp_apply(h2, lp, "geglu")
+    return x, h_last
+
+
+def _attn_block_seq(cfg, lp, x):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rmsnorm(x, lp["ln"])
+    q = (h @ lp["wq"]).reshape(B, S, H, hd)
+    k_ = (h @ lp["wk"]).reshape(B, S, KV, hd)
+    v = (h @ lp["wv"]).reshape(B, S, KV, hd)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_ = apply_rope(k_, pos, cfg.rope_theta)
+    kx, vx = _expand_kv(k_, cfg.q_per_kv), _expand_kv(v, cfg.q_per_kv)
+    if S > 1024 and S % cfg.attn_block_q == 0 and S % cfg.attn_block_kv == 0:
+        o = blocked_attention(
+            q, kx, vx, causal=True, window=cfg.sliding_window,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+        )
+    else:
+        o = naive_attention(q, kx, vx, causal=True, window=cfg.sliding_window)
+    x = x + o.reshape(B, S, H * hd) @ lp["wo"]
+    h2 = rmsnorm(x, lp["ln2"])
+    x = x + mlp_apply(h2, lp, "geglu")
+    return x, (k_, v)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, extra_embeds=None):
+    G, R, T = _counts(cfg)
+    x = params["embed"][tokens]
+
+    def group(x, gp):
+        rec_p, attn_p = gp
+        for r in range(R):
+            lp = jax.tree.map(lambda a: a[r], rec_p)
+            x, _ = _rec_block_seq(cfg, lp, x)
+        x, _ = _attn_block_seq(cfg, attn_p, x)
+        return x, None
+
+    from .layers import maybe_remat
+
+    x, _ = jax.lax.scan(
+        maybe_remat(group, cfg.remat), x, (params["rec"], params["attn"])
+    )
+    for t in range(T):
+        lp = jax.tree.map(lambda a: a[t], params["tail_rec"])
+        x, _ = _rec_block_seq(cfg, lp, x)
+    x = rmsnorm(x, params["final_norm"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    from .losses import lm_loss
+
+    hidden, _ = forward(cfg, params, batch["tokens"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    loss = lm_loss(hidden @ head, batch["labels"], batch.get("loss_weights"))
+    return loss, {"nll": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, seq_len: int) -> dict:
+    G, R, T = _counts(cfg)
+    Wl, cw, hd, KV = cfg.lru_width, cfg.conv_width, cfg.d_head, cfg.n_kv_heads
+    C = min(seq_len, cfg.sliding_window or seq_len)
+    dt = cfg.jnp_dtype
+    cache = {
+        "lru": jnp.zeros((G, R, B, Wl), jnp.float32),
+        "conv": jnp.zeros((G, R, B, cw - 1, Wl), dt),
+        "k": jnp.zeros((G, B, C, KV, hd), dt),
+        "v": jnp.zeros((G, B, C, KV, hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if T:
+        cache["tail_lru"] = jnp.zeros((T, B, Wl), jnp.float32)
+        cache["tail_conv"] = jnp.zeros((T, B, cw - 1, Wl), dt)
+    return cache
+
+
+def _rec_block_step(cfg, lp, x, h_lru, conv_tail):
+    """Decode one token through a recurrent block."""
+    h = rmsnorm(x, lp["ln"])
+    gate = jax.nn.gelu((h @ lp["w_gate_in"]).astype(jnp.float32)).astype(x.dtype)
+    xb = h @ lp["w_x"]  # (B, 1, Wl)
+    window = jnp.concatenate([conv_tail, xb], axis=1)  # (B, cw, Wl)
+    conv = jnp.einsum(
+        "bwc,wc->bc", window.astype(jnp.float32), lp["conv_w"].astype(jnp.float32)
+    ) + lp["conv_b"].astype(jnp.float32)
+    xb = conv[:, None].astype(x.dtype)
+    ys, h_new = rglru_step(lp, xb, h_lru)
+    x = x + (ys * gate) @ lp["w_out"]
+    x = x + mlp_apply(rmsnorm(x, lp["ln2"]), lp, "geglu")
+    return x, h_new, window[:, 1:]
+
+
+def _attn_block_step(cfg, lp, x, kc, vc, slot, pos_t, valid):
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rmsnorm(x, lp["ln"])
+    q = (h @ lp["wq"]).reshape(B, 1, H, hd)
+    k_ = (h @ lp["wk"]).reshape(B, 1, KV, hd)
+    v = (h @ lp["wv"]).reshape(B, 1, KV, hd)
+    pos = jnp.broadcast_to(pos_t[None, None], (B, 1)).astype(jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_ = apply_rope(k_, pos, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k_, (_z(slot), slot, _z(slot), _z(slot)))
+    vc = jax.lax.dynamic_update_slice(vc, v, (_z(slot), slot, _z(slot), _z(slot)))
+    o = decode_attention(q, kc, vc, valid)
+    x = x + o.reshape(B, 1, H * hd) @ lp["wo"]
+    x = x + mlp_apply(rmsnorm(x, lp["ln2"]), lp, "geglu")
+    return x, kc, vc
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    extra_embeds=None,
+    extra_slots: int = 0,
+):
+    from .transformer import _to_ring
+
+    G, R, T = _counts(cfg)
+    B, S = tokens.shape
+    cw = cfg.conv_width
+    C = min(S + extra_slots, cfg.sliding_window or (S + extra_slots))
+    x = params["embed"][tokens]
+
+    def group(x, gp):
+        rec_p, attn_p = gp
+        lrus, convs = [], []
+        for r in range(R):
+            lp = jax.tree.map(lambda a: a[r], rec_p)
+            # conv tail must be captured pre-conv: recompute branch input
+            h = rmsnorm(x, lp["ln"])
+            xb_raw = h @ lp["w_x"]
+            x, h_last = _rec_block_seq(cfg, lp, x)
+            lrus.append(h_last)
+            convs.append(xb_raw[:, S - (cw - 1) :])
+        x, (k_, v) = _attn_block_seq(cfg, attn_p, x)
+        return x, (
+            jnp.stack(lrus),
+            jnp.stack(convs),
+            _to_ring(k_, S, C),
+            _to_ring(v, S, C),
+        )
+
+    x, (lru, conv, ks, vs) = jax.lax.scan(group, x, (params["rec"], params["attn"]))
+    cache = {
+        "lru": lru,
+        "conv": conv,
+        "k": ks,
+        "v": vs,
+        "len": jnp.asarray(S, jnp.int32),
+    }
+    if T:
+        t_lru, t_conv = [], []
+        for t in range(T):
+            lp = jax.tree.map(lambda a: a[t], params["tail_rec"])
+            h = rmsnorm(x, lp["ln"])
+            xb_raw = h @ lp["w_x"]
+            x, h_last = _rec_block_seq(cfg, lp, x)
+            t_lru.append(h_last)
+            t_conv.append(xb_raw[:, S - (cw - 1) :])
+        cache["tail_lru"] = jnp.stack(t_lru)
+        cache["tail_conv"] = jnp.stack(t_conv)
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x[:, -1:] @ head, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
+    G, R, T = _counts(cfg)
+    B = token.shape[0]
+    C = cache["k"].shape[2]
+    x = params["embed"][token]
+    pos_t = cache["len"]
+    slot = cache["len"] % jnp.asarray(C, jnp.int32)
+    n_valid = jnp.minimum(cache["len"] + 1, C)
+    valid = jnp.broadcast_to(jnp.arange(C)[None] < n_valid, (B, C))
+
+    def group(x, layer):
+        rec_p, attn_p, lru, conv, kc, vc = layer
+        lrus, convs = [], []
+        for r in range(R):
+            lp = jax.tree.map(lambda a: a[r], rec_p)
+            x, h_new, c_new = _rec_block_step(cfg, lp, x, lru[r], conv[r])
+            lrus.append(h_new)
+            convs.append(c_new)
+        x, kc, vc = _attn_block_step(cfg, attn_p, x, kc, vc, slot, pos_t, valid)
+        return x, (jnp.stack(lrus), jnp.stack(convs), kc, vc)
+
+    x, (lru, conv, ks, vs) = jax.lax.scan(
+        group,
+        x,
+        (params["rec"], params["attn"], cache["lru"], cache["conv"], cache["k"], cache["v"]),
+    )
+    new_cache = {
+        "lru": lru,
+        "conv": conv,
+        "k": ks,
+        "v": vs,
+        "len": cache["len"] + 1,
+    }
+    if T:
+        t_lru, t_conv = [], []
+        for t in range(T):
+            lp = jax.tree.map(lambda a: a[t], params["tail_rec"])
+            x, h_new, c_new = _rec_block_step(
+                cfg, lp, x, cache["tail_lru"][t], cache["tail_conv"][t]
+            )
+            t_lru.append(h_new)
+            t_conv.append(c_new)
+        new_cache["tail_lru"] = jnp.stack(t_lru)
+        new_cache["tail_conv"] = jnp.stack(t_conv)
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache

@@ -1,0 +1,247 @@
+"""Whisper-style encoder-decoder transformer backbone [arXiv:2212.04356].
+
+Per the assignment carve-out, the audio frontend (mel-spectrogram + conv
+feature extractor) is a STUB: ``input_specs`` provides precomputed frame
+embeddings (B, encoder_positions, D) — this module implements the encoder
+(bidirectional self-attention + learned positions) and the decoder (causal
+self-attention + cross-attention) that consume them.
+
+Serving: prefill runs encoder + decoder prompt and caches (a) the decoder
+self-attention KV ring and (b) the per-layer cross-attention K/V projected
+once from the encoder output (standard whisper serving trick).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    _z,
+    _expand_kv,
+    blocked_attention,
+    decode_attention,
+    layernorm,
+    mlp_apply,
+    naive_attention,
+)
+
+
+def init(cfg: ModelConfig, rng: jax.Array) -> dict:
+    cfg.validate()
+    dt = cfg.jnp_dtype
+    D, V, F = cfg.d_model, cfg.vocab, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    k = iter(jax.random.split(rng, 64))
+
+    def w(key, *shape, scale=0.02):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+    def attn(n, prefix=""):
+        return {
+            f"{prefix}ln": jnp.ones((*n, D), dt),
+            f"{prefix}ln_b": jnp.zeros((*n, D), dt),
+            f"{prefix}wq": w(next(k), *n, D, H * hd),
+            f"{prefix}wk": w(next(k), *n, D, KV * hd),
+            f"{prefix}wv": w(next(k), *n, D, KV * hd),
+            f"{prefix}wo": w(next(k), *n, H * hd, D, scale=0.005),
+        }
+
+    def mlp(n):
+        return {
+            "mln": jnp.ones((*n, D), dt),
+            "mln_b": jnp.zeros((*n, D), dt),
+            "w_in": w(next(k), *n, D, F),
+            "w_out": w(next(k), *n, F, D, scale=0.005),
+        }
+
+    return {
+        "enc_pos": w(next(k), cfg.encoder_positions, D, scale=0.01),
+        "enc": {**attn((Le,)), **mlp((Le,))},
+        "enc_norm": jnp.ones((D,), dt),
+        "enc_norm_b": jnp.zeros((D,), dt),
+        "embed": w(next(k), V, D),
+        "dec_pos": w(next(k), 32768, D, scale=0.01),
+        "dec": {**attn((Ld,)), **attn((Ld,), "x_"), **mlp((Ld,))},
+        "dec_norm": jnp.ones((D,), dt),
+        "dec_norm_b": jnp.zeros((D,), dt),
+    }
+
+
+def _mha(cfg, lp, xq, xkv, causal, prefix=""):
+    B, Sq, D = xq.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (xq @ lp[f"{prefix}wq"]).reshape(B, Sq, H, hd)
+    k_ = (xkv @ lp[f"{prefix}wk"]).reshape(B, xkv.shape[1], KV, hd)
+    v = (xkv @ lp[f"{prefix}wv"]).reshape(B, xkv.shape[1], KV, hd)
+    kx, vx = _expand_kv(k_, cfg.q_per_kv), _expand_kv(v, cfg.q_per_kv)
+    if (
+        causal
+        and Sq == xkv.shape[1]
+        and Sq > 1024
+        and Sq % cfg.attn_block_q == 0
+        and Sq % cfg.attn_block_kv == 0
+    ):
+        o = blocked_attention(
+            q, kx, vx, causal=True,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+        )
+    else:
+        o = naive_attention(q, kx, vx, causal)
+    return o.reshape(B, Sq, H * hd) @ lp[f"{prefix}wo"], (k_, v)
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, encoder_positions, D) stub embeddings."""
+    from .layers import maybe_remat
+
+    x = frames.astype(cfg.jnp_dtype) + params["enc_pos"][None]
+
+    def block(x, lp):
+        h = layernorm(x, lp["ln"], lp["ln_b"])
+        o, _ = _mha(cfg, lp, h, h, causal=False)
+        x = x + o
+        h = layernorm(x, lp["mln"], lp["mln_b"])
+        x = x + mlp_apply(h, lp, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(maybe_remat(block, cfg.remat), x, params["enc"])
+    return layernorm(x, params["enc_norm"], params["enc_norm_b"])
+
+
+def _decoder_block(cfg, lp, x, enc_out, causal=True):
+    h = layernorm(x, lp["ln"], lp["ln_b"])
+    o, kv = _mha(cfg, lp, h, h, causal=causal)
+    x = x + o
+    h = layernorm(x, lp["x_ln"], lp["x_ln_b"])
+    o, _ = _mha(cfg, lp, h, enc_out, causal=False, prefix="x_")
+    x = x + o
+    h = layernorm(x, lp["mln"], lp["mln_b"])
+    x = x + mlp_apply(h, lp, "gelu")
+    return x, kv
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, extra_embeds=None):
+    """Training forward: extra_embeds = audio frames (B, T_enc, D)."""
+    B, S = tokens.shape
+    from .layers import maybe_remat
+
+    enc_out = encode(cfg, params, extra_embeds)
+    x = params["embed"][tokens] + params["dec_pos"][:S][None]
+
+    def block(x, lp):
+        x, _ = _decoder_block(cfg, lp, x, enc_out)
+        return x, None
+
+    x, _ = jax.lax.scan(maybe_remat(block, cfg.remat), x, params["dec"])
+    x = layernorm(x, params["dec_norm"], params["dec_norm_b"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    from .losses import lm_loss
+
+    hidden, _ = forward(
+        cfg, params, batch["tokens"], batch["extra_embeds"]
+    )
+    loss = lm_loss(
+        hidden @ params["embed"].T, batch["labels"], batch.get("loss_weights")
+    )
+    return loss, {"nll": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, seq_len: int) -> dict:
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.jnp_dtype
+    Te = cfg.encoder_positions
+    return {
+        "k": jnp.zeros((L, B, seq_len, KV, hd), dt),
+        "v": jnp.zeros((L, B, seq_len, KV, hd), dt),
+        "xk": jnp.zeros((L, B, Te, KV, hd), dt),
+        "xv": jnp.zeros((L, B, Te, KV, hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    extra_embeds=None,
+    extra_slots: int = 0,
+):
+    from .transformer import _to_ring
+
+    B, S = tokens.shape
+    C = S + extra_slots
+    enc_out = encode(cfg, params, extra_embeds)
+    x = params["embed"][tokens] + params["dec_pos"][:S][None]
+
+    def block(x, lp):
+        x, (k_, v) = _decoder_block(cfg, lp, x, enc_out)
+        # Cross K/V computed once per layer for decode.
+        KV, hd = cfg.n_kv_heads, cfg.d_head
+        xk = (enc_out @ lp["x_wk"]).reshape(B, -1, KV, hd)
+        xv = (enc_out @ lp["x_wv"]).reshape(B, -1, KV, hd)
+        return x, (_to_ring(k_, S, C), _to_ring(v, S, C), xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(block, x, params["dec"])
+    x = layernorm(x, params["dec_norm"], params["dec_norm_b"])
+    logits = x[:, -1:] @ params["embed"].T
+    cache = {
+        "k": ks,
+        "v": vs,
+        "xk": xks,
+        "xv": xvs,
+        "len": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
+    B = token.shape[0]
+    C = cache["k"].shape[2]
+    pos_t = cache["len"]
+    slot = cache["len"] % jnp.asarray(C, jnp.int32)
+    x = params["embed"][token] + params["dec_pos"][pos_t][None, None]
+    n_valid = jnp.minimum(cache["len"] + 1, C)
+    valid = jnp.broadcast_to(jnp.arange(C)[None] < n_valid, (B, C))
+    Te = cache["xk"].shape[2]
+    valid_x = jnp.ones((B, Te), bool)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def block(x, layer):
+        lp, kc, vc, xk, xv = layer
+        h = layernorm(x, lp["ln"], lp["ln_b"])
+        q = (h @ lp["wq"]).reshape(B, 1, H, hd)
+        k_ = (h @ lp["wk"]).reshape(B, 1, KV, hd)
+        v = (h @ lp["wv"]).reshape(B, 1, KV, hd)
+        kc = jax.lax.dynamic_update_slice(kc, k_, (_z(slot), slot, _z(slot), _z(slot)))
+        vc = jax.lax.dynamic_update_slice(vc, v, (_z(slot), slot, _z(slot), _z(slot)))
+        o = decode_attention(q, kc, vc, valid)
+        x = x + o.reshape(B, 1, H * hd) @ lp["wo"]
+        # cross attention against cached encoder K/V
+        h = layernorm(x, lp["x_ln"], lp["x_ln_b"])
+        qx = (h @ lp["x_wq"]).reshape(B, 1, H, hd)
+        o = decode_attention(qx, xk, xv, valid_x)
+        x = x + o.reshape(B, 1, H * hd) @ lp["x_wo"]
+        h = layernorm(x, lp["mln"], lp["mln_b"])
+        x = x + mlp_apply(h, lp, "gelu")
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        block, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = layernorm(x, params["dec_norm"], params["dec_norm_b"])
+    logits = x @ params["embed"].T
+    new_cache = dict(cache, k=ks, v=vs, len=cache["len"] + 1)
+    return logits, new_cache

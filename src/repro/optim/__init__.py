@@ -1,0 +1,24 @@
+"""Optimizers and schedules.
+
+The paper's x-update (eq. 5a) *is* the optimizer for ADMM agents — it lives
+in `repro.core.admm` / `repro.distributed.consensus`. This package provides:
+
+- the tau^k / gamma^k schedules of Theorem 2,
+- plain SGD / Adam used by the gradient-descent baselines (DGD) and by the
+  non-consensus reference training loop in examples,
+- gradient clipping / weight-decay utilities shared by the launcher.
+"""
+
+from .schedules import admm_schedule, constant, rsqrt_decay, rsqrt_growth
+from .sgd import adam_init, adam_update, sgd_update, clip_by_global_norm
+
+__all__ = [
+    "admm_schedule",
+    "constant",
+    "rsqrt_decay",
+    "rsqrt_growth",
+    "adam_init",
+    "adam_update",
+    "sgd_update",
+    "clip_by_global_norm",
+]

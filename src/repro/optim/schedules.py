@@ -1,0 +1,41 @@
+"""tau^k / gamma^k schedules (Theorem 2) + generic step-size schedules."""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["rsqrt_growth", "rsqrt_decay", "constant", "admm_schedule"]
+
+
+def rsqrt_growth(c: float) -> Callable:
+    """tau^k = c * sqrt(k) (k is 1-based)."""
+
+    def f(k):
+        return c * jnp.sqrt(jnp.asarray(k, jnp.float32))
+
+    return f
+
+
+def rsqrt_decay(c: float) -> Callable:
+    """gamma^k = c / sqrt(k) (k is 1-based)."""
+
+    def f(k):
+        return c / jnp.sqrt(jnp.asarray(k, jnp.float32))
+
+    return f
+
+
+def constant(c: float) -> Callable:
+    def f(k):
+        return jnp.full((), c, jnp.float32)
+
+    return f
+
+
+def admm_schedule(
+    c_tau: float, c_gamma: float
+) -> Tuple[Callable, Callable]:
+    """The (tau^k, gamma^k) pair sI-ADMM converges under (Theorem 2)."""
+    return rsqrt_growth(c_tau), rsqrt_decay(c_gamma)

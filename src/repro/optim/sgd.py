@@ -1,0 +1,67 @@
+"""SGD / Adam over pytrees (baselines + reference LM training loop)."""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd_update", "adam_init", "adam_update", "clip_by_global_norm"]
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def sgd_update(params: Any, grads: Any, lr) -> Any:
+    return jax.tree.map(
+        lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params,
+        grads,
+    )
+
+
+def adam_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(
+    params: Any,
+    grads: Any,
+    state: dict,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, dict]:
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_ = b1 * m + (1 - b1) * g32
+        v_ = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_ / (1 - b1**tf)
+        vhat = v_ / (1 - b2**tf)
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_, v_
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "t": t}

@@ -1,0 +1,14 @@
+"""Test configuration.
+
+Enables float64 for the core-algorithm tests (the paper's convergence claims
+are verified to tolerances below float32 resolution). Model/kernel tests
+request their dtypes explicitly, so this does not affect them.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device. Only
+`repro/launch/dryrun.py` forces 512 placeholder devices (in its own process).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,127 @@
+"""Unit + property tests for (K, R) MDS gradient coding (paper §III-B)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coding import (
+    GradientCode,
+    cyclic_repetition_code,
+    fractional_repetition_code,
+    make_code,
+    paper_fig2_code,
+    uncoded,
+)
+
+
+def _exhaustive_straggler_check(code: GradientCode, rng):
+    """Any S stragglers: decode == exact partition-gradient sum."""
+    g = rng.standard_normal((code.K, 7))
+    expected = g.sum(0)
+    msgs = code.encode(g)
+    for dead in itertools.combinations(range(code.K), code.S):
+        alive = np.ones(code.K, dtype=bool)
+        alive[list(dead)] = False
+        np.testing.assert_allclose(
+            code.decode(msgs, alive), expected, rtol=1e-9, atol=1e-9
+        )
+
+
+@pytest.mark.parametrize("K,S", [(3, 1), (4, 1), (4, 2), (6, 2), (9, 2), (10, 4)])
+def test_cyclic_exact_recovery(K, S):
+    _exhaustive_straggler_check(
+        cyclic_repetition_code(K, S), np.random.default_rng(0)
+    )
+
+
+@pytest.mark.parametrize("K,S", [(4, 1), (6, 1), (6, 2), (9, 2), (8, 3)])
+def test_fractional_exact_recovery(K, S):
+    _exhaustive_straggler_check(
+        fractional_repetition_code(K, S), np.random.default_rng(1)
+    )
+
+
+def test_fractional_requires_divisibility():
+    with pytest.raises(ValueError):
+        fractional_repetition_code(5, 1)  # (S+1)=2 does not divide 5
+
+
+def test_paper_fig2_example():
+    """The exact K=3, S=1 example of Fig. 2 and its decode vectors."""
+    code = paper_fig2_code()
+    g = np.random.default_rng(2).standard_normal((3, 4))
+    msgs = code.encode(g)
+    # g1 = 1/2 g~1 + g~2, g2 = g~2 - g~3, g3 = 1/2 g~1 + g~3
+    np.testing.assert_allclose(msgs[0], 0.5 * g[0] + g[1])
+    np.testing.assert_allclose(msgs[1], g[1] - g[2])
+    np.testing.assert_allclose(msgs[2], 0.5 * g[0] + g[2])
+    # "any of first two arrived messages can recover the summation"
+    for dead in range(3):
+        alive = np.ones(3, dtype=bool)
+        alive[dead] = False
+        np.testing.assert_allclose(code.decode(msgs, alive), g.sum(0))
+    # Fig. 2 decode for alive={0,2}: g1 + g3 = sum
+    a = code.decode_vector(np.array([True, False, True]))
+    np.testing.assert_allclose(a, [1.0, 0.0, 1.0], atol=1e-9)
+
+
+def test_cyclic_support_structure():
+    code = cyclic_repetition_code(6, 2)
+    for j in range(6):
+        assert set(code.support(j)) == {(j + t) % 6 for t in range(3)}
+    assert code.replication == 3  # S+1 partitions per ECN
+
+
+def test_uncoded_is_identity():
+    code = uncoded(4)
+    np.testing.assert_allclose(code.B, np.eye(4))
+    assert code.R == 4
+
+
+def test_decode_rejects_too_few():
+    code = cyclic_repetition_code(4, 1)
+    with pytest.raises(ValueError):
+        code.decode_vector(np.array([True, True, False, False]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    K=st.integers(3, 8),
+    S=st.integers(0, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_property_cyclic_any_R_of_K_decodes(K, S, seed):
+    """Property: for any valid (K, S), any R responses recover the exact sum."""
+    if S >= K:
+        S = K - 1
+    code = make_code("cyclic" if S else "uncoded", K, S, seed=seed)
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((K, 3))
+    msgs = code.encode(g)
+    # random straggler pattern of size S
+    dead = rng.choice(K, size=S, replace=False)
+    alive = np.ones(K, dtype=bool)
+    alive[dead] = False
+    np.testing.assert_allclose(
+        code.decode(msgs, alive), g.sum(0), rtol=1e-8, atol=1e-8
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_property_decode_vector_in_rowspan(data):
+    """a^T B == 1^T exactly (the defining MDS gradient-code identity)."""
+    K = data.draw(st.integers(3, 7))
+    S = data.draw(st.integers(1, min(3, K - 1)))
+    seed = data.draw(st.integers(0, 1000))
+    code = cyclic_repetition_code(K, S, seed=seed)
+    rng = np.random.default_rng(seed)
+    dead = rng.choice(K, size=S, replace=False)
+    alive = np.ones(K, dtype=bool)
+    alive[dead] = False
+    a = code.decode_vector(alive)
+    np.testing.assert_allclose(a @ code.B, np.ones(K), atol=1e-7)
+    assert np.all(np.abs(a[~alive]) < 1e-12)  # only alive ECNs used

@@ -1,0 +1,112 @@
+"""Property-based tests on the distributed consensus runtime's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.distributed import ConsensusConfig, ConsensusRuntime
+from repro.kernels import coded_combine
+from repro.kernels.ref import coded_combine_ref
+
+
+class _Quad:
+    def init(self, rng):
+        return {"w": jnp.zeros((3,), jnp.float32)}
+
+    def loss(self, params, batch):
+        t = batch["tokens"].astype(jnp.float32)
+        row = 0.5 * jnp.sum((params["w"][None] - t) ** 2, axis=-1)
+        w = batch.get("loss_weights")
+        loss = row.mean() if w is None else jnp.sum(w * row)
+        return loss, {"nll": loss, "moe_aux": jnp.zeros(())}
+
+
+def _mesh():
+    return jax.make_mesh((1, 1, 1), ("agent", "data", "model"))
+
+
+@given(
+    K=st.integers(2, 8),
+    S=st.integers(0, 3),
+    A=st.integers(1, 3),
+    seed=st.integers(0, 20),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_row_weights_sum_to_one(K, S, A, seed):
+    """For any alive set with >= R responders, the decode-folded row weights
+    of each partition's copies sum to 1/(K*P) — i.e. the weighted backward
+    computes EXACTLY the uncoded mean gradient (eq. 6 exactness)."""
+    if S >= K:
+        return
+    cfg = ConsensusConfig(n_agents=A, K=K, S=S, scheme="cyclic" if S else "uncoded", seed=seed)
+    rt = ConsensusRuntime(_Quad(), cfg, _mesh())
+    code = cfg.code()
+    P_rows = 2
+    rows = K * (S + 1) * P_rows
+    rng = np.random.default_rng(seed)
+    alive = np.ones((A, K), bool)
+    for a in range(A):
+        if S:
+            dead = rng.choice(K, size=S, replace=False)
+            alive[a, dead] = False
+    w = np.asarray(rt.row_weights(jnp.asarray(alive), rows))  # (A, rows)
+    # per-partition weight sums: row (j, u, p) belongs to partition sup[j][u]
+    sup = np.stack([code.support(j) for j in range(K)])  # (K, S+1)
+    for a in range(A):
+        per_part = np.zeros(K)
+        wr = w[a].reshape(K, S + 1, P_rows)
+        for j in range(K):
+            for u in range(S + 1):
+                per_part[sup[j, u]] += wr[j, u, 0]  # same weight for all p
+        # decode vector solves in f64 but is applied in f32 — allow f32 noise
+        np.testing.assert_allclose(
+            per_part, 1.0 / (K * P_rows), rtol=1e-3, atol=1e-6
+        )
+
+
+@given(
+    J=st.integers(1, 8),
+    n=st.integers(1, 5000),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_coded_combine_any_shape(J, n, seed):
+    """The Pallas combine kernel handles arbitrary (J, n) via padding."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    msgs = jax.random.normal(k1, (J, n), jnp.float32)
+    coeffs = jax.random.normal(k2, (J,), jnp.float32)
+    out = coded_combine(msgs, coeffs, block_n=256)
+    ref = coded_combine_ref(msgs, coeffs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_z_update_conservation():
+    """After every step, z == z_prev + (1/A) sum_a mask_a [(dx_a) - (dy_a)/rho]
+    (eq. 4c) — the token update is exactly the committed agents' deltas."""
+    A, K, S = 3, 3, 1
+    cfg = ConsensusConfig(n_agents=A, K=K, S=S, scheme="cyclic", mode="incremental", rho=0.7)
+    rt = ConsensusRuntime(_Quad(), cfg, _mesh())
+    code = cfg.code()
+    sup = [code.support(j) for j in range(K)]
+    rng = np.random.default_rng(0)
+    P_rows = 2
+    distinct = rng.standard_normal((A, K, P_rows, 3)).astype(np.float32)
+    rows = []
+    for a in range(A):
+        for j in range(K):
+            for t in sup[j]:
+                rows.append(distinct[a, t])
+    batch = {"tokens": jnp.asarray(np.concatenate(rows)).reshape(-1, 3)}
+    state = rt.init_state(jax.random.key(1))
+    for k in range(5):
+        alive = jnp.asarray(np.ones((A, K), bool))
+        new, _ = rt.train_step(state, batch, alive)
+        dx = np.asarray(new["x"]["w"], np.float64) - np.asarray(state["x"]["w"], np.float64)
+        dy = np.asarray(new["y"]["w"], np.float64) - np.asarray(state["y"]["w"], np.float64)
+        expect = np.asarray(state["z"]["w"], np.float64) + (dx - dy / cfg.rho).sum(0) / A
+        np.testing.assert_allclose(
+            np.asarray(new["z"]["w"], np.float64), expect, rtol=1e-5, atol=1e-6
+        )
+        state = new

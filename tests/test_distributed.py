@@ -1,0 +1,220 @@
+"""Distributed runtime tests (math on CPU; lowering is covered by the
+dry-run subprocess test in test_dryrun.py).
+
+The consensus train_step is a pure function — we drive it directly with a
+stub model and verify the csI-ADMM equations, the coded-gradient row-weight
+algebra, and straggler invariance (any R-of-K alive set decodes the same
+gradient).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import ConsensusConfig, ConsensusRuntime, auto_spec, AxisLayout
+from repro.distributed.sharding import batch_specs
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# stub model: per-row quadratic loss 0.5 ||w - t_b||^2 (grad linear in rows)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuadModel:
+    p: int = 4
+
+    def init(self, rng):
+        return {"w": jnp.zeros((self.p,), jnp.float32)}
+
+    def loss(self, params, batch):
+        t = batch["tokens"].astype(jnp.float32)  # (B, p) targets
+        d = params["w"][None] - t
+        row_loss = 0.5 * jnp.sum(d * d, axis=-1)  # (B,)
+        w = batch.get("loss_weights")
+        if w is None:
+            loss = row_loss.mean()
+        else:
+            loss = jnp.sum(w * row_loss)
+        return loss, {"nll": loss, "moe_aux": jnp.zeros(())}
+
+
+def _dummy_mesh():
+    return jax.make_mesh((1, 1, 1), ("agent", "data", "model"))
+
+
+def _coded_batch(rng, A, K, S, P_rows, p, support):
+    """Coded-allocated batch: partition t's rows replicated on the S+1 ECNs
+    whose supports contain t, laid out (A, K, S+1, P_rows) row-major."""
+    distinct = rng.standard_normal((A, K, P_rows, p)).astype(np.float32)
+    rows = np.zeros((A, K, S + 1, P_rows, p), np.float32)
+    for j in range(K):
+        for u, t in enumerate(support[j]):
+            rows[:, j, u] = distinct[:, t]
+    return distinct, rows.reshape(A * K * (S + 1) * P_rows, p)
+
+
+@pytest.mark.parametrize("scheme,K,S", [("cyclic", 4, 1), ("fractional", 4, 1), ("cyclic", 5, 2)])
+def test_decoded_gradient_invariant_to_stragglers(scheme, K, S):
+    """Any R-of-K alive pattern yields the same decoded gradient == the
+    uncoded mean gradient over distinct rows (MDS exactness, eq. 6)."""
+    A, P_rows, p = 2, 3, 4
+    cfg = ConsensusConfig(n_agents=A, K=K, S=S, scheme=scheme)
+    rt = ConsensusRuntime(QuadModel(p), cfg, _dummy_mesh())
+    code = cfg.code()
+    sup = [code.support(j) for j in range(K)]
+    rng = np.random.default_rng(0)
+    distinct, flat = _coded_batch(rng, A, K, S, P_rows, p, sup)
+    w0 = jnp.zeros((p,), jnp.float32)
+    # expected: mean over the distinct rows of (w - t) = -mean(t)
+    expect = -distinct.reshape(A, K * P_rows, p).mean(axis=1)
+
+    rows_per_agent = flat.shape[0] // A
+    batch_rows = jnp.asarray(flat).reshape(A, rows_per_agent, p)
+
+    def decoded_grad(alive_np):
+        w = rt.row_weights(jnp.asarray(alive_np), rows_per_agent)  # (A, rows)
+        g = []
+        for a in range(A):
+            d = w0[None] - batch_rows[a]
+            g.append(-(w[a][:, None] * batch_rows[a]).sum(0) + w[a].sum() * w0)
+        return np.stack([np.asarray(x) for x in g])
+
+    all_alive = np.ones((A, K), bool)
+    g_full = decoded_grad(all_alive)
+    np.testing.assert_allclose(g_full, expect, rtol=1e-5, atol=1e-6)
+    # every pattern with exactly S dead ECNs decodes identically
+    import itertools
+
+    for dead in itertools.combinations(range(K), S):
+        alive = np.ones((A, K), bool)
+        alive[:, list(dead)] = False
+        g = decoded_grad(alive)
+        np.testing.assert_allclose(g, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_incremental_mode_updates_one_agent():
+    A, K, S, P_rows, p = 4, 4, 1, 2, 3
+    cfg = ConsensusConfig(n_agents=A, K=K, S=S, scheme="fractional", mode="incremental")
+    rt = ConsensusRuntime(QuadModel(p), cfg, _dummy_mesh())
+    code = cfg.code()
+    sup = [code.support(j) for j in range(K)]
+    rng = np.random.default_rng(1)
+    _, flat = _coded_batch(rng, A, K, S, P_rows, p, sup)
+    state = rt.init_state(jax.random.key(0))
+    batch = {"tokens": jnp.asarray(flat)}
+    alive = jnp.ones((A, K), bool)
+    new, metrics = rt.train_step(state, batch, alive)
+    assert int(new["k"]) == 1
+    # active agent for k=1 is (k-1) % A = 0
+    dx = np.asarray(new["x"]["w"]) - np.asarray(state["x"]["w"])
+    changed = np.abs(dx).sum(axis=1) > 0
+    assert changed[0] and not changed[1:].any()
+    dy = np.asarray(new["y"]["w"]) - np.asarray(state["y"]["w"])
+    assert (np.abs(dy).sum(axis=1) > 0)[0] and not (np.abs(dy).sum(axis=1) > 0)[1:].any()
+
+
+@pytest.mark.parametrize("mode", ["incremental", "parallel"])
+def test_consensus_converges_quadratic(mode):
+    """z and all x_a converge to the average target (the consensus optimum
+    of sum_a 0.5||w - mu_a||^2) under the Theorem-2 schedules."""
+    A, K, S, P_rows, p = 2, 4, 1, 4, 3
+    cfg = ConsensusConfig(
+        n_agents=A, K=K, S=S, scheme="cyclic", mode=mode,
+        rho=1.0, c_tau=0.05, c_gamma=1.0,
+    )
+    rt = ConsensusRuntime(QuadModel(p), cfg, _dummy_mesh())
+    code = cfg.code()
+    sup = [code.support(j) for j in range(K)]
+    rng = np.random.default_rng(2)
+    distinct, flat = _coded_batch(rng, A, K, S, P_rows, p, sup)
+    target = distinct.reshape(A, -1, p).mean(axis=(0, 1))
+
+    step = jax.jit(rt.train_step)
+    state = rt.init_state(jax.random.key(0))
+    batch = {"tokens": jnp.asarray(flat)}
+    rng2 = np.random.default_rng(3)
+    iters = 600 if mode == "incremental" else 300
+    for _ in range(iters):
+        # random straggler: drop one ECN per agent with prob 1/2
+        alive = np.ones((A, K), bool)
+        for a in range(A):
+            if rng2.random() < 0.5:
+                alive[a, rng2.integers(K)] = False
+        state, metrics = step(state, batch, jnp.asarray(alive))
+    z = np.asarray(state["z"]["w"])
+    np.testing.assert_allclose(z, target, rtol=0.05, atol=0.05)
+    x = np.asarray(state["x"]["w"])
+    np.testing.assert_allclose(x, np.broadcast_to(target, x.shape), rtol=0.1, atol=0.1)
+    assert float(metrics["consensus_residual"]) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# sharding inference
+# ---------------------------------------------------------------------------
+
+
+def test_auto_spec_rules():
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices() * 1).reshape(1, 1, 1), ("agent", "data", "model")
+    )
+    # pretend axis sizes via a fake layout
+    layout = AxisLayout(mesh, data=("data",), model="model")
+    layout.data_size, layout.model_size = 16, 16
+
+    # (L, D, F): TP on F, FSDP on D, layer dim untouched
+    assert auto_spec((56, 6144, 16384), layout) == P(None, "data", "model")
+    # embedding (V, D): data on V, model on D
+    assert auto_spec((32768, 4096), layout) == P("data", "model")
+    # indivisible vocab (mamba2): V=50280 % 16 != 0 -> replicated on that dim
+    assert auto_spec((50280, 2048), layout) == P(None, "model")
+    # 1D stays replicated
+    assert auto_spec((2048,), layout) == P("model")
+    # norm smaller than axis
+    assert auto_spec((7,), layout) == P(None)
+    # consensus x with leading agent axis
+    assert auto_spec((2, 56, 6144, 16384), layout, leading=("agent",)) == P(
+        "agent", None, "data", "model"
+    )
+    # kv cache (L, B, C, KV, hd): data on B, model on hd
+    assert auto_spec((56, 128, 32768, 8, 128), layout) == P(
+        None, "data", None, None, "model"
+    )
+
+
+def test_batch_specs():
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()).reshape(1, 1, 1), ("agent", "data", "model")
+    )
+    layout = AxisLayout(mesh, data=("data",), model="model", agent="agent")
+    layout.data_size, layout.agent_size = 8, 2
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+    }
+    specs = batch_specs(batch, layout)
+    assert specs["tokens"] == P(("agent", "data"), None)
+
+
+def test_moe_grouped_dispatch_equivalence():
+    """groups>1 dispatch == global dispatch when capacity doesn't bind
+    (the §Perf shard-local MoE variant must not change the math)."""
+    import jax
+    from repro.models.layers import moe_apply
+
+    T, D, E, F, k = 64, 16, 4, 32, 2
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (T, D))
+    p = {
+        "router": jax.random.normal(ks[1], (D, E)),
+        "w_gate": jax.random.normal(ks[2], (E, D, F)) * 0.1,
+        "w_up": jax.random.normal(ks[3], (E, D, F)) * 0.1,
+        "w_down": jax.random.normal(ks[4], (E, F, D)) * 0.1,
+    }
+    o1, _ = moe_apply(x, p, E, k, 8.0, groups=1)
+    o4, _ = moe_apply(x, p, E, k, 8.0, groups=4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o4), atol=1e-6)

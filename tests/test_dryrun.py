@@ -1,0 +1,59 @@
+"""Dry-run integration smoke: lowering + the cost pipeline end-to-end in a
+subprocess (the 512-device flag must be set before jax init, so it cannot
+run in the main pytest process). One small arch both meshes + consensus."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=timeout,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_single_and_multi(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    r = _run(["--arch", "qwen3-0.6b", "--shape", "train_4k", "--out", str(out)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    recs = [json.loads(l) for l in out.read_text().splitlines()]
+    assert len(recs) == 2  # single + multi pod
+    meshes = {rec["mesh"] for rec in recs}
+    assert meshes == {"16x16", "2x16x16"}
+    for rec in recs:
+        assert rec["flops_dev"] > 1e12  # trip-count-aware (XLA's is ~30x less)
+        assert rec["flops_dev"] > 3 * rec["xla_flops_dev"]
+        assert rec["collective_bytes_dev"] > 0
+        assert rec["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+        assert rec["unknown_trip_whiles"] == 0
+
+
+@pytest.mark.slow
+def test_dryrun_consensus_train():
+    r = _run([
+        "--arch", "qwen3-0.6b", "--shape", "train_4k", "--mesh", "multi",
+        "--consensus",
+    ])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("{")][0]
+    rec = json.loads(line)
+    assert rec["step"].startswith("consensus_train")
+    assert rec["mesh"] == "2x16x16"
+    assert rec["flops_dev"] > 0 and rec["collective_bytes_dev"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_decode_skip_rules():
+    # long_500k on a pure full-attention arch must be skipped with a reason
+    r = _run(["--arch", "llama3-405b", "--shape", "long_500k", "--mesh", "single"])
+    assert r.returncode == 0
+    assert "0 lowered" in r.stdout or "skipped" in r.stdout

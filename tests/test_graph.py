@@ -1,0 +1,50 @@
+"""Network topology tests (paper §II Assumption 1, §V-A setup)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_network, metropolis_weights
+
+
+@settings(max_examples=20, deadline=None)
+@given(N=st.integers(3, 30), eta=st.floats(0.1, 1.0), seed=st.integers(0, 99))
+def test_property_network_connected_with_hamiltonian(N, eta, seed):
+    """Assumption 1: connected and at least one Hamiltonian cycle."""
+    net = make_network(N, eta, seed=seed)
+    assert net.N == N
+    # Hamiltonian order visits each agent exactly once...
+    assert sorted(net.hamiltonian) == list(range(N))
+    # ...along existing edges.
+    A = net.adjacency
+    for a in range(N):
+        i, j = net.hamiltonian[a], net.hamiltonian[(a + 1) % N]
+        assert A[i, j]
+    # Shortest-path cycle visits every agent, along edges.
+    assert set(net.shortest_path_cycle) == set(range(N))
+    r = net.shortest_path_cycle
+    for a in range(len(r)):
+        assert A[r[a], r[(a + 1) % len(r)]]
+
+
+def test_connectivity_ratio():
+    net = make_network(20, connectivity=0.5, seed=0)
+    target = 0.5 * 20 * 19 / 2
+    assert abs(net.E - target) <= 1
+
+
+def test_metropolis_weights_doubly_stochastic():
+    net = make_network(12, 0.4, seed=2)
+    W = metropolis_weights(net)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W, W.T)
+    # spectral: second eigenvalue < 1 (connected)
+    ev = np.sort(np.abs(np.linalg.eigvalsh(W)))
+    assert ev[-1] <= 1 + 1e-12
+
+
+def test_small_network_rejected():
+    with pytest.raises(ValueError):
+        make_network(2)

@@ -1,0 +1,140 @@
+"""Validation of the trip-count-aware HLO cost analyzer against programs
+with analytically known FLOP counts (the thing XLA's cost_analysis gets
+wrong for lax.scan bodies)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _cost(fn, *shapes):
+    lowered = jax.jit(fn).lower(
+        *[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    )
+    return analyze_hlo(lowered.compile().as_text())
+
+
+def test_single_matmul():
+    c = _cost(lambda a, b: a @ b, (512, 512), (512, 512))
+    expect = 2 * 512**3
+    assert abs(c.flops - expect) / expect < 0.02
+    # bytes: 3 x 1MB minimum
+    assert c.bytes >= 3 * 512 * 512 * 4
+
+
+def test_scan_multiplies_body():
+    L = 8
+
+    def f(x, ws):
+        def body(x, w):
+            return x @ w, None
+
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    c = _cost(f, (256, 256), (L, 256, 256))
+    expect = L * 2 * 256**3
+    assert abs(c.flops - expect) / expect < 0.05, c.flops
+    # the dynamic-slice of the weight + the matmul operands run L times
+    assert c.bytes > L * 3 * 256 * 256 * 4
+    assert c.unknown_trip_whiles == 0
+
+
+def test_scan_matches_unrolled():
+    L = 6
+
+    def scan_f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    def unrolled_f(x, ws):
+        for i in range(L):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    cs = _cost(scan_f, (128, 128), (L, 128, 128))
+    cu = _cost(unrolled_f, (128, 128), (L, 128, 128))
+    assert abs(cs.flops - cu.flops) / cu.flops < 0.05
+
+
+def test_nested_scan():
+    Lo, Li = 4, 5
+
+    def f(x, ws):
+        def outer(x, w):
+            def inner(x, _):
+                return x @ w, None
+
+            x, _ = jax.lax.scan(inner, x, None, length=Li)
+            return x, None
+
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x
+
+    c = _cost(f, (128, 128), (Lo, 128, 128))
+    expect = Lo * Li * 2 * 128**3
+    assert abs(c.flops - expect) / expect < 0.05, c.flops
+
+
+def test_grad_counts_backward():
+    def f(x, w):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    def step(x, w):
+        return jax.grad(f, argnums=1)(x, w)
+
+    c_fwd = _cost(f, (256, 256), (256, 256))
+    c_grad = _cost(step, (256, 256), (256, 256))
+    # grad includes fwd matmul + 1 bwd matmul (dW = x^T delta) >= 2x fwd dot
+    assert c_grad.flops > 1.8 * c_fwd.flops
+
+
+def test_collectives_inside_scan_multiplied():
+    import os
+    import subprocess
+    import sys
+
+    # collectives need >1 device: run in a subprocess with 4 host devices
+    prog = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import sys
+sys.path.insert(0, "src")
+from repro.launch.hlo_cost import analyze_hlo
+
+L = 7
+mesh = jax.make_mesh((4,), ("d",))
+def f(x, ws):
+    def body(x, w):
+        return jax.lax.with_sharding_constraint(x @ w, NamedSharding(mesh, P())), None
+    x, _ = jax.lax.scan(body, x, ws)
+    return x
+with mesh:
+    lowered = jax.jit(
+        f,
+        in_shardings=(NamedSharding(mesh, P("d", None)), NamedSharding(mesh, P())),
+        out_shardings=NamedSharding(mesh, P()),
+    ).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((L, 64, 64), jnp.float32),
+    )
+    c = analyze_hlo(lowered.compile().as_text())
+counts = {k: v for k, v in c.collective_counts.items() if v}
+total = sum(counts.values())
+assert total >= L, (counts, total)
+print("OK", counts)
+"""
+    r = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

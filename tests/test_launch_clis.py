@@ -1,0 +1,51 @@
+"""End-to-end CLI smoke: the train and serve launchers run as real
+subprocesses on a reduced config (what an operator would actually type)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(mod, *args, timeout=400):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args],
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=timeout,
+    )
+
+
+@pytest.mark.slow
+def test_train_cli_plain(tmp_path):
+    r = _run(
+        "repro.launch.train", "--arch", "qwen3-0.6b", "--smoke",
+        "--steps", "3", "--batch", "4", "--seq", "32",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+    )
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "loss" in r.stdout
+    assert any(f.startswith("step_") for f in os.listdir(tmp_path))
+
+
+@pytest.mark.slow
+def test_train_cli_consensus():
+    r = _run(
+        "repro.launch.train", "--arch", "qwen3-0.6b", "--smoke",
+        "--mode", "consensus", "--agents", "2", "--ecns", "4",
+        "--stragglers", "1", "--steps", "3", "--batch", "16", "--seq", "32",
+    )
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "residual" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli():
+    r = _run(
+        "repro.launch.serve", "--arch", "qwen3-0.6b", "--smoke",
+        "--batch", "2", "--prompt-len", "16", "--new-tokens", "4",
+    )
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "ms/token" in r.stdout

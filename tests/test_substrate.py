@@ -1,0 +1,127 @@
+"""Substrate tests: data pipeline, optimizers/schedules, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import latest_step, load_pytree, restore_step, save_pytree, save_step
+from repro.core.coding import make_code
+from repro.data import TokenStream, agent_token_streams, ecn_batch_indices, make_lm_batch, partition_for_code
+from repro.optim import adam_init, adam_update, admm_schedule, clip_by_global_norm, sgd_update
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_token_stream_deterministic_and_disjoint():
+    a, b = agent_token_streams(2, vocab=97, seed=3)
+    xa = TokenStream(97, seed=3000).sample(256)
+    np.testing.assert_array_equal(a.sample(256), xa)
+    assert not np.array_equal(a.sample(256), b.sample(256))
+
+
+def test_make_lm_batch_shift():
+    s = TokenStream(257, seed=0)
+    batch = make_lm_batch(s, 4, 32)
+    assert batch["tokens"].shape == (4, 32)
+    # labels are next tokens: tokens[t+1] == labels[t]
+    np.testing.assert_array_equal(batch["tokens"][:, 1:], batch["labels"][:, :-1])
+
+
+@given(
+    b=st.integers(6, 4096),
+    K=st.integers(1, 6),
+    S=st.integers(0, 2),
+)
+@settings(max_examples=60, deadline=None)
+def test_partition_supports_cover_everything(b, K, S):
+    """Property: every partition is stored by >= S+1 ECNs (repetition), so
+    any S stragglers leave at least one live copy of every partition."""
+    if S >= K or K % (S + 1) != 0 or b < K:
+        return
+    scheme = "fractional" if S else "uncoded"
+    code = make_code(scheme, K, S)
+    boundaries, supports = partition_for_code(b, code)
+    assert boundaries[-1] == (b // K) * K
+    counts = np.zeros(K, dtype=int)
+    for sup in supports:
+        counts[sup] += 1
+    assert (counts >= S + 1).all()
+
+
+def test_ecn_batch_indices_cycle():
+    # P=12, mu=4 -> 3 batches; cycles walk 0,4,8,0,...
+    off = ecn_batch_indices(np.arange(7), P=12, mu=4)
+    np.testing.assert_array_equal(off, [0, 4, 8, 0, 4, 8, 0])
+    assert (off + 4 <= 12).all()
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+
+def test_admm_schedule_matches_theorem2():
+    tau, gamma = admm_schedule(c_tau=0.3, c_gamma=2.0)
+    for k in (1, 4, 100):
+        assert float(tau(k)) == pytest.approx(0.3 * np.sqrt(k))
+        assert float(gamma(k)) == pytest.approx(2.0 / np.sqrt(k))
+
+
+def test_sgd_and_clip():
+    params = {"w": jnp.ones((3,), jnp.float32), "b": jnp.zeros((2,), jnp.bfloat16)}
+    grads = {"w": jnp.full((3,), 4.0), "b": jnp.full((2,), 3.0, jnp.bfloat16)}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    cn = np.sqrt(sum(np.sum(np.square(np.asarray(g, np.float32))) for g in jax.tree.leaves(clipped)))
+    assert cn == pytest.approx(1.0, rel=1e-2)
+    new = sgd_update(params, grads, 0.5)
+    np.testing.assert_allclose(np.asarray(new["w"]), 1.0 - 0.5 * 4.0)
+    assert new["b"].dtype == jnp.bfloat16
+
+
+def test_adam_converges_quadratic():
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = adam_init(params)
+    for _ in range(300):
+        grads = {"x": 2.0 * params["x"]}
+        params, state = adam_update(params, grads, state, lr=0.1)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) / 3},
+        "step": jnp.asarray(7, jnp.int32),
+        "lst": [jnp.ones(2), jnp.zeros((1,), jnp.float64)],
+    }
+    p = os.path.join(tmp_path, "ck.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_steps_and_mismatch(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.ones(3)}
+    assert latest_step(d) is None
+    save_step(d, 10, tree)
+    save_step(d, 20, tree)
+    assert latest_step(d) == 20
+    restored, step = restore_step(d, jnp.zeros_like(tree["w"]) if False else tree)
+    assert step == 20
+    with pytest.raises(ValueError):
+        load_pytree(os.path.join(d, "step_00000020.npz"), {"w": jnp.ones(3), "extra": jnp.ones(1)})
