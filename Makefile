@@ -1,0 +1,26 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test test-slow bench bench-smoke docs-check
+
+# Tier-1 verification: the whole suite, stop on first failure.
+test:
+	$(PY) -m pytest -x -q
+
+# Include the slow consensus x all-archs lowering tests.
+test-slow:
+	$(PY) -m pytest -q -m "slow or not slow"
+
+# Full figure benchmarks (about a minute per figure on one CPU core).
+bench:
+	$(PY) -m benchmarks.run
+
+# Fast signal: fig5 grid at smoke scale through the sweep engine,
+# plus the kernel micro-benchmarks.
+bench-smoke:
+	$(PY) -m benchmarks.run --sweep fig5 --iters 120 --runs 2
+	$(PY) -m benchmarks.run --only kernels
+
+# Every DESIGN.md / EXPERIMENTS.md section cited from src/ and
+# benchmarks/ must exist (tools/docs_check.py).
+docs-check:
+	$(PY) tools/docs_check.py

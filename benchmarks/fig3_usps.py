@@ -12,32 +12,43 @@ Claims validated (EXPERIMENTS.md 'Paper claims'):
   - larger M converges to better accuracy at equal communication (Thm 2),
   - incremental methods dominate gossip baselines in communication,
   - coded schemes' running time is untouched by straggler delay epsilon.
+
+All sub-figures execute through `repro.experiments` as ONE engine call:
+cases sharing a jit static signature (e.g. the M=60 runs of (a), (c) and
+(f)) batch into a single vmapped scan (EXPERIMENTS.md §Perf).
 """
 
 from __future__ import annotations
 
-import numpy as np
+from repro.experiments import Case, get_sweep, run_sweep
 
-from repro.core.admm import ADMMConfig, run_incremental_admm
-from repro.core.baselines import run_dadmm, run_dgd, run_extra, run_wadmm
-from repro.core.straggler import StragglerModel
-
-from .common import Rows, comm_to_accuracy, setup
+from .common import Rows, comm_to_accuracy
 
 ITERS = 1500
 
 
 def run(rows: Rows) -> dict:
-    net, problem = setup("usps")
+    # (USPS-standin: b=99 rows/agent over K=3 ECNs caps M at 90; the paper
+    # plots up to M=300 with a different N — the trend is what's validated)
+    cases = (
+        get_sweep("fig3_minibatch", iters=ITERS).cases()
+        + get_sweep("fig3_baselines", iters=ITERS).cases()
+        + get_sweep("fig3_stragglers", iters=ITERS).cases()
+        + [
+            Case(
+                method="sI-ADMM", dataset="usps", iters=ITERS,
+                traversal="shortest_path",
+            )
+        ]
+    )
+    cases = list(dict.fromkeys(cases))  # sub-figures share runs; dedupe
+    result = run_sweep(cases)
     out = {}
 
     # (a)+(b) mini-batch sweep -------------------------------------------
-    # (USPS-standin: b=99 rows/agent over K=3 ECNs caps M at 90; the paper
-    # plots up to M=300 with a different N — the trend is what's validated)
     for M in (6, 30, 60, 90):
-        cfg = ADMMConfig(M=M, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
-        tr = rows.timeit(f"fig3ab/sI-ADMM[M={M}]", run_incremental_admm,
-                         problem, net, cfg, ITERS, repeats=1)
+        tr = result.trace(M=M, method="sI-ADMM", traversal="hamiltonian",
+                          S=0, epsilon=1e-2)
         out[f"M={M}"] = tr
         rows.add(
             f"fig3ab/sI-ADMM[M={M}]/final", 0.0,
@@ -45,41 +56,28 @@ def run(rows: Rows) -> dict:
         )
 
     # (c)+(d) vs baselines -------------------------------------------------
-    cfg = ADMMConfig(M=60, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
-    tr_si = out["M=60"]
-    tr_w = rows.timeit("fig3cd/W-ADMM", run_wadmm, problem, net, cfg, ITERS, repeats=1)
-    tr_da = rows.timeit("fig3cd/D-ADMM", run_dadmm, problem, net, 0.1, ITERS // 10, repeats=1)
-    tr_dgd = rows.timeit("fig3cd/DGD", run_dgd, problem, net, 0.05, ITERS // 10, repeats=1)
-    tr_ex = rows.timeit("fig3cd/EXTRA", run_extra, problem, net, 0.05, ITERS // 10, repeats=1)
     target = 0.15
-    for name, tr in [
-        ("sI-ADMM", tr_si), ("W-ADMM", tr_w), ("D-ADMM", tr_da),
-        ("DGD", tr_dgd), ("EXTRA", tr_ex),
-    ]:
+    for name in ("sI-ADMM", "W-ADMM", "D-ADMM", "DGD", "EXTRA"):
+        tr = (
+            out["M=60"]
+            if name == "sI-ADMM"
+            else result.trace(method=name)
+        )
         c = comm_to_accuracy(tr, target)
         rows.add(
             f"fig3cd/{name}/comm_to_acc{target}", 0.0,
             f"comm={c};final_acc={tr.accuracy[-1]:.4f};"
             f"final_test={tr.test_error[-1]:.4f}",
         )
-    out.update(wadmm=tr_w, dadmm=tr_da, dgd=tr_dgd, extra=tr_ex)
+        out[name] = tr
 
     # (e) straggler running time ------------------------------------------
-    # fractional repetition needs (S+1) | K, so it runs with K=4 ECNs
-    # (paper's Fig. 2 cyclic example is exactly K=3, S=1).
-    net4, problem4 = setup("usps", K=4)
     for eps in (2e-3, 5e-3, 1e-2):
-        strag = StragglerModel(p_straggle=0.3, delay=5e-3, epsilon=eps)
         res = {}
-        for label, scheme, S, K, nt, pb in [
-            ("uncoded", "uncoded", 0, 3, net, problem),
-            ("cyclic", "cyclic", 1, 3, net, problem),
-            ("fractional", "fractional", 1, 4, net4, problem4),
-        ]:
-            M = 60 if K == 3 else 48  # divisible by (S+1)*K
-            cfg = ADMMConfig(M=M, K=K, S=S, scheme=scheme,
-                             rho=1.0, c_tau=0.5, c_gamma=1.0)
-            tr = run_incremental_admm(pb, nt, cfg, ITERS, straggler=strag)
+        for label in ("uncoded", "cyclic", "fractional"):
+            tr = result.trace(
+                method="csI-ADMM", scheme=label, epsilon=eps
+            )
             res[label] = tr
             rows.add(
                 f"fig3e/{label}[eps={eps}]", 0.0,
@@ -88,13 +86,16 @@ def run(rows: Rows) -> dict:
         out[f"straggler_eps={eps}"] = res
 
     # (f) shortest-path cycle ----------------------------------------------
-    cfg = ADMMConfig(M=60, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5,
-                     c_gamma=1.0, traversal="shortest_path")
-    tr = rows.timeit("fig3f/sI-ADMM[shortest_path]", run_incremental_admm,
-                     problem, net, cfg, ITERS, repeats=1)
+    tr = result.trace(traversal="shortest_path")
     rows.add(
         "fig3f/sI-ADMM[shortest_path]/final", 0.0,
         f"acc={tr.accuracy[-1]:.4f};comm={tr.comm_cost[-1]:.0f}",
     )
     out["shortest_path"] = tr
+
+    rows.add(
+        "fig3/engine", 0.0,
+        f"dispatches={result.n_dispatches};runs={len(result.cases)};"
+        f"wall_s={result.wall_s:.2f}",
+    )
     return out

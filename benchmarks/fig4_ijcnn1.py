@@ -2,35 +2,31 @@
 
 Same protocol as fig3 at the paper's larger-data scale: communication
 comparison + straggler robustness (the paper reports 'the same performance
-can be observed' — this benchmark checks exactly that)."""
+can be observed' — this benchmark checks exactly that).
+
+Runs through `repro.experiments` (one vmapped dispatch per static group;
+EXPERIMENTS.md §Perf)."""
 
 from __future__ import annotations
 
-from repro.core.admm import ADMMConfig, run_incremental_admm
-from repro.core.baselines import run_dadmm, run_dgd, run_extra, run_wadmm
-from repro.core.straggler import StragglerModel
+from repro.experiments import get_sweep, run_sweep
 
-from .common import Rows, comm_to_accuracy, setup
+from .common import Rows, comm_to_accuracy
 
 ITERS = 1200
 
 
 def run(rows: Rows) -> dict:
-    net, problem = setup("ijcnn1")
+    cases = (
+        get_sweep("fig4_baselines", iters=ITERS).cases()
+        + get_sweep("fig4_stragglers", iters=ITERS).cases()
+    )
+    result = run_sweep(cases)
     out = {}
 
-    cfg = ADMMConfig(M=60, K=3, S=0, scheme="uncoded", rho=1.0, c_tau=0.5, c_gamma=1.0)
-    tr_si = rows.timeit("fig4/sI-ADMM", run_incremental_admm,
-                        problem, net, cfg, ITERS, repeats=1)
-    tr_w = rows.timeit("fig4/W-ADMM", run_wadmm, problem, net, cfg, ITERS, repeats=1)
-    tr_da = rows.timeit("fig4/D-ADMM", run_dadmm, problem, net, 0.1, ITERS // 10, repeats=1)
-    tr_dgd = rows.timeit("fig4/DGD", run_dgd, problem, net, 0.05, ITERS // 10, repeats=1)
-    tr_ex = rows.timeit("fig4/EXTRA", run_extra, problem, net, 0.05, ITERS // 10, repeats=1)
     target = 0.15
-    for name, tr in [
-        ("sI-ADMM", tr_si), ("W-ADMM", tr_w), ("D-ADMM", tr_da),
-        ("DGD", tr_dgd), ("EXTRA", tr_ex),
-    ]:
+    for name in ("sI-ADMM", "W-ADMM", "D-ADMM", "DGD", "EXTRA"):
+        tr = result.trace(method=name)
         rows.add(
             f"fig4/{name}/comm_to_acc{target}", 0.0,
             f"comm={comm_to_accuracy(tr, target)};"
@@ -38,15 +34,17 @@ def run(rows: Rows) -> dict:
         )
         out[name] = tr
 
-    strag = StragglerModel(p_straggle=0.3, delay=5e-3, epsilon=1e-2)
-    for label, scheme, S in [
-        ("uncoded", "uncoded", 0), ("cyclic", "cyclic", 1),
-    ]:
-        cfg = ADMMConfig(M=60, K=3, S=S, scheme=scheme, rho=1.0, c_tau=0.5, c_gamma=1.0)
-        tr = run_incremental_admm(problem, net, cfg, ITERS, straggler=strag)
+    for label in ("uncoded", "cyclic"):
+        tr = result.trace(method="csI-ADMM", scheme=label)
         rows.add(
             f"fig4/straggler/{label}", 0.0,
             f"sim_time={tr.sim_time[-1]:.4f}s;acc={tr.accuracy[-1]:.4f}",
         )
         out[f"straggler_{label}"] = tr
+
+    rows.add(
+        "fig4/engine", 0.0,
+        f"dispatches={result.n_dispatches};runs={len(result.cases)};"
+        f"wall_s={result.wall_s:.2f}",
+    )
     return out

@@ -1,45 +1,46 @@
 """Paper Fig. 5 — straggler count vs convergence speed (synthetic data).
 
-csI-ADMM with K=6 ECNs and S in {0,...,4}: the allowed batch size is
+csI-ADMM with K=6 ECNs and S in {0,...,3}: the allowed batch size is
 M_bar = M/(S+1) (eq. 22), so more straggler tolerance => smaller effective
 batch => slower convergence (Corollary 2). Averaged over independent runs
-like the paper (10 runs there, 4 here for 1-core time)."""
+like the paper (10 runs there, 4 here for 1-core time).
+
+The whole S x seed grid executes through `repro.experiments`: one vmapped
+`lax.scan` (single jit trace + dispatch) per S group instead of a serial
+Python loop per (S, seed) pair — serial-vs-vmapped timings in
+EXPERIMENTS.md §Perf.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.admm import ADMMConfig, run_incremental_admm
-from repro.core.coding import make_code
+from repro.experiments import get_sweep, reduce_mean, run_sweep
 
-from .common import Rows, iters_to_accuracy, setup
+from .common import Rows, iters_to_accuracy
 
 ITERS = 1200
 RUNS = 4
-K = 6
-M = 360  # divisible by (S+1)*K for S in {0,1,2,3,5}
 
 
 def run(rows: Rows) -> dict:
+    result = run_sweep(get_sweep("fig5", iters=ITERS, runs=RUNS))
     out = {}
-    for S in (0, 1, 2, 3):
-        accs, speeds = [], []
-        for r in range(RUNS):
-            net, problem = setup("synthetic", K=K, seed=r)
-            # cyclic repetition works for any (K, S); fractional would
-            # require (S+1) | K (fails at S=3, K=6)
-            cfg = ADMMConfig(
-                M=M, K=K, S=S, scheme="cyclic" if S else "uncoded",
-                rho=1.0, c_tau=0.5, c_gamma=1.0, seed=r,
-            )
-            tr = run_incremental_admm(problem, net, cfg, ITERS)
-            accs.append(tr.accuracy)
-            speeds.append(iters_to_accuracy(tr, 0.05))
-        acc = np.mean(accs, axis=0)
+    for (S,), red in reduce_mean(result, by=("S",)).items():
+        acc = red["mean"]
+        speeds = [
+            iters_to_accuracy(tr, 0.05) for _, tr in result.select(S=S)
+        ]
+        M = red["cases"][0].M
         rows.add(
             f"fig5/csI-ADMM[S={S}]", 0.0,
             f"M_bar={M // (S + 1)};iters_to_acc0.05={np.mean(speeds):.0f};"
             f"final_acc={acc[-1]:.5f}",
         )
         out[S] = acc
+    rows.add(
+        "fig5/engine", 0.0,
+        f"dispatches={result.n_dispatches};runs={len(result.cases)};"
+        f"wall_s={result.wall_s:.2f}",
+    )
     return out

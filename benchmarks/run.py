@@ -3,6 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows. Select subsets with
 ``--only fig3,fig5``; the roofline table is produced separately from
 dry-run records by ``python -m benchmarks.roofline``.
+
+Named sweeps from `repro.experiments.registry` run directly:
+
+  PYTHONPATH=src python -m benchmarks.run --sweep fig5
+  PYTHONPATH=src python -m benchmarks.run --sweep topology_grid --iters 400 --runs 2
+  PYTHONPATH=src python -m benchmarks.run --list-sweeps
 """
 
 from __future__ import annotations
@@ -16,33 +22,88 @@ from .common import Rows
 MODULES = ("fig3", "fig4", "fig5", "kernels")
 
 
+def run_sweeps(names, rows: Rows, iters=None, runs=None, serial=False) -> None:
+    import dataclasses
+
+    from repro.experiments import Case, emit_rows, get_sweep, run_sweep
+
+    kw = {}
+    if iters is not None:
+        kw["iters"] = iters
+    if runs is not None:
+        kw["runs"] = runs
+    for name in names:
+        spec = get_sweep(name, **kw)
+        result = run_sweep(spec, serial=serial)
+        # Reduce over the seed axis; group rows by every Case field that
+        # actually varies across the grid (dict-valued axes may touch
+        # several fields, so inspect the cases rather than the axis names).
+        by = tuple(
+            f.name for f in dataclasses.fields(Case)
+            if f.name != "seed"
+            and len({getattr(c, f.name) for c in result.cases}) > 1
+        ) or ("method",)
+        emit_rows(result, rows, f"sweep/{spec.name}", by)
+        rows.add(
+            f"sweep/{spec.name}/engine", 0.0,
+            f"dispatches={result.n_dispatches};runs={len(result.cases)};"
+            f"wall_s={result.wall_s:.2f};mode={'serial' if serial else 'vmapped'}",
+        )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--only", default=None,
         help=f"comma-separated subset of {MODULES}",
     )
+    ap.add_argument(
+        "--sweep", default=None,
+        help="comma-separated named sweeps from repro.experiments.registry "
+        "(skips the figure modules)",
+    )
+    ap.add_argument("--list-sweeps", action="store_true")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override sweep iteration count (smoke runs)")
+    ap.add_argument("--runs", type=int, default=None,
+                    help="override sweep seed count")
+    ap.add_argument("--serial", action="store_true",
+                    help="run sweeps through the per-run serial path "
+                    "(reference/timing baseline)")
     args = ap.parse_args(argv)
-    selected = args.only.split(",") if args.only else list(MODULES)
+
+    if args.list_sweeps:
+        from repro.experiments import SWEEPS, get_sweep
+
+        for name in sorted(SWEEPS):
+            print(f"{name}: {get_sweep(name).description}")
+        return 0
 
     rows = Rows()
     t0 = time.time()
-    if "fig3" in selected:
-        from . import fig3_usps
+    if args.sweep:
+        run_sweeps(
+            args.sweep.split(","), rows,
+            iters=args.iters, runs=args.runs, serial=args.serial,
+        )
+    else:
+        selected = args.only.split(",") if args.only else list(MODULES)
+        if "fig3" in selected:
+            from . import fig3_usps
 
-        fig3_usps.run(rows)
-    if "fig4" in selected:
-        from . import fig4_ijcnn1
+            fig3_usps.run(rows)
+        if "fig4" in selected:
+            from . import fig4_ijcnn1
 
-        fig4_ijcnn1.run(rows)
-    if "fig5" in selected:
-        from . import fig5_stragglers
+            fig4_ijcnn1.run(rows)
+        if "fig5" in selected:
+            from . import fig5_stragglers
 
-        fig5_stragglers.run(rows)
-    if "kernels" in selected:
-        from . import kernels_micro
+            fig5_stragglers.run(rows)
+        if "kernels" in selected:
+            from . import kernels_micro
 
-        kernels_micro.run(rows)
+            kernels_micro.run(rows)
 
     print("name,us_per_call,derived")
     rows.emit()

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,33 @@ from .admm import ADMMConfig, Trace
 from .graph import Network, metropolis_weights
 from .problems import LeastSquaresProblem
 
-__all__ = ["run_wadmm", "run_dadmm", "run_dgd", "run_extra"]
+__all__ = [
+    "run_wadmm",
+    "run_dadmm",
+    "run_dgd",
+    "run_extra",
+    "run_wadmm_batch",
+    "run_dadmm_batch",
+    "run_dgd_batch",
+    "run_extra_batch",
+]
+
+
+def _batched(impl, static_names):
+    """jit(vmap(impl)) with the given keyword statics (DESIGN.md §7)."""
+
+    @partial(jax.jit, static_argnames=static_names)
+    def batched(*arrays, **statics):
+        return jax.vmap(partial(impl, **statics))(*arrays)
+
+    return batched
+
+
+def _stack(runs: Sequence[tuple]):
+    return tuple(
+        jnp.asarray(np.stack([np.asarray(r[i]) for r in runs]))
+        for i in range(len(runs[0]))
+    )
 
 
 def _metrics(x, z_mean, x_star, xs_norm, O_test, T_test, N):
@@ -64,14 +90,8 @@ def _trace(acc, test_err, z_err, comm_per_iter, x, z) -> Trace:
 # --------------------------------------------------------------------------
 
 
-def run_wadmm(
-    problem: LeastSquaresProblem,
-    net: Network,
-    cfg: ADMMConfig,
-    iters: int,
-) -> Trace:
-    """Walkman with the same stochastic proximal-linearized x-update."""
-    N, p, d, b = problem.N, problem.p, problem.d, problem.b
+def _walk_arrays(problem: LeastSquaresProblem, net: Network, cfg: ADMMConfig, iters: int):
+    N, b = problem.N, problem.b
     rng = np.random.default_rng(cfg.seed)
     # Random walk over neighbors.
     agents = np.zeros(iters, dtype=np.int32)
@@ -84,27 +104,58 @@ def run_wadmm(
     offsets = ((np.arange(iters) // N % nb) * M).astype(np.int32)
     tau = cfg.c_tau * np.sqrt(np.arange(1, iters + 1))
     gamma = cfg.c_gamma / np.sqrt(np.arange(1, iters + 1))
+    dt = problem.O.dtype
+    return (
+        problem.O,
+        problem.T,
+        problem.x_star().astype(dt),
+        problem.O_test,
+        problem.T_test,
+        agents,
+        offsets,
+        tau.astype(dt),
+        gamma.astype(dt),
+        np.asarray(cfg.rho, dtype=dt),
+    )
 
-    x_star = problem.x_star()
+
+def run_wadmm(
+    problem: LeastSquaresProblem,
+    net: Network,
+    cfg: ADMMConfig,
+    iters: int,
+) -> Trace:
+    """Walkman with the same stochastic proximal-linearized x-update."""
+    arrays = _walk_arrays(problem, net, cfg, iters)
     x, z, acc, test_err, z_err = _scan_walk(
-        jnp.asarray(problem.O),
-        jnp.asarray(problem.T),
-        jnp.asarray(x_star.astype(problem.O.dtype)),
-        jnp.asarray(problem.O_test),
-        jnp.asarray(problem.T_test),
-        jnp.asarray(agents),
-        jnp.asarray(offsets),
-        jnp.asarray(tau.astype(problem.O.dtype)),
-        jnp.asarray(gamma.astype(problem.O.dtype)),
-        float(cfg.rho),
-        M=M,
-        N=N,
+        *(jnp.asarray(a) for a in arrays), M=cfg.M, N=problem.N
     )
     return _trace(acc, test_err, z_err, 1.0, x, z)
 
 
-@partial(jax.jit, static_argnames=("M", "N"))
-def _scan_walk(O, T, x_star, O_test, T_test, agents, offsets, tau, gamma, rho, *, M, N):
+def run_wadmm_batch(
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    cfgs: Sequence[ADMMConfig],
+    iters: int,
+) -> List[Trace]:
+    """All runs as one vmapped scan; requires uniform (M, N, shapes)."""
+    sigs = {(c.M, p.N, p.O.shape, p.T.shape) for p, c in zip(problems, cfgs)}
+    if len(sigs) != 1:
+        raise ValueError(f"batch mixes static signatures: {sigs}")
+    runs = [
+        _walk_arrays(p, n, c, iters)
+        for p, n, c in zip(problems, nets, cfgs)
+    ]
+    out = _scan_walk_batched(*_stack(runs), M=cfgs[0].M, N=problems[0].N)
+    out = [np.asarray(o) for o in out]
+    return [
+        _trace(*(o[r] for o in out[2:]), 1.0, out[0][r], out[1][r])
+        for r in range(len(runs))
+    ]
+
+
+def _scan_walk_impl(O, T, x_star, O_test, T_test, agents, offsets, tau, gamma, rho, *, M, N):
     p, d = O.shape[2], T.shape[2]
     x0 = jnp.zeros((N, p, d), O.dtype)
     y0 = jnp.zeros((N, p, d), O.dtype)
@@ -134,9 +185,27 @@ def _scan_walk(O, T, x_star, O_test, T_test, agents, offsets, tau, gamma, rho, *
     return x, z, *out
 
 
+_scan_walk = partial(jax.jit, static_argnames=("M", "N"))(_scan_walk_impl)
+_scan_walk_batched = _batched(_scan_walk_impl, ("M", "N"))
+
+
 # --------------------------------------------------------------------------
 # D-ADMM — gossip decentralized consensus ADMM
 # --------------------------------------------------------------------------
+
+
+def _dadmm_arrays(problem: LeastSquaresProblem, net: Network, rho: float):
+    dt = problem.O.dtype
+    return (
+        problem.O,
+        problem.T,
+        net.adjacency.astype(dt),
+        net.degree().astype(dt),
+        problem.x_star().astype(dt),
+        problem.O_test,
+        problem.T_test,
+        np.asarray(rho, dtype=dt),
+    )
 
 
 def run_dadmm(
@@ -145,26 +214,31 @@ def run_dadmm(
     rho: float,
     iters: int,
 ) -> Trace:
-    N, p = problem.N, problem.p
-    A = jnp.asarray(net.adjacency.astype(problem.O.dtype))
-    deg = jnp.asarray(net.degree().astype(problem.O.dtype))
-    x_star = problem.x_star()
+    arrays = _dadmm_arrays(problem, net, rho)
     x, acc, test_err, z_err = _scan_dadmm(
-        jnp.asarray(problem.O),
-        jnp.asarray(problem.T),
-        A,
-        deg,
-        jnp.asarray(x_star.astype(problem.O.dtype)),
-        jnp.asarray(problem.O_test),
-        jnp.asarray(problem.T_test),
-        float(rho),
-        iters=iters,
+        *(jnp.asarray(a) for a in arrays), iters=iters
     )
     return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
 
 
-@partial(jax.jit, static_argnames=("iters",))
-def _scan_dadmm(O, T, A, deg, x_star, O_test, T_test, rho, *, iters):
+def run_dadmm_batch(
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    rhos: Sequence[float],
+    iters: int,
+) -> List[Trace]:
+    runs = [
+        _dadmm_arrays(p, n, r) for p, n, r in zip(problems, nets, rhos)
+    ]
+    out = _scan_dadmm_batched(*_stack(runs), iters=iters)
+    x, acc, test_err, z_err = (np.asarray(o) for o in out)
+    return [
+        _trace(acc[r], test_err[r], z_err[r], 2 * nets[r].E, x[r], x[r].mean(0))
+        for r in range(len(runs))
+    ]
+
+
+def _scan_dadmm_impl(O, T, A, deg, x_star, O_test, T_test, rho, *, iters):
     N, b, p = O.shape
     d = T.shape[2]
     xs_norm = jnp.linalg.norm(x_star)
@@ -191,9 +265,34 @@ def _scan_dadmm(O, T, A, deg, x_star, O_test, T_test, rho, *, iters):
     return x, *out
 
 
+_scan_dadmm = partial(jax.jit, static_argnames=("iters",))(_scan_dadmm_impl)
+_scan_dadmm_batched = _batched(_scan_dadmm_impl, ("iters",))
+
+
 # --------------------------------------------------------------------------
 # DGD and EXTRA — gossip first-order methods
 # --------------------------------------------------------------------------
+
+
+def _dgd_arrays(
+    problem: LeastSquaresProblem, net: Network, alpha0: float, iters: int,
+    diminishing: bool,
+):
+    dt = problem.O.dtype
+    steps = (
+        alpha0 / np.sqrt(np.arange(1, iters + 1))
+        if diminishing
+        else np.full(iters, alpha0)
+    )
+    return (
+        problem.O,
+        problem.T,
+        metropolis_weights(net).astype(dt),
+        problem.x_star().astype(dt),
+        problem.O_test,
+        problem.T_test,
+        steps.astype(dt),
+    )
 
 
 def run_dgd(
@@ -203,23 +302,31 @@ def run_dgd(
     iters: int,
     diminishing: bool = True,
 ) -> Trace:
-    W = jnp.asarray(metropolis_weights(net).astype(problem.O.dtype))
-    x_star = problem.x_star()
-    steps = alpha0 / np.sqrt(np.arange(1, iters + 1)) if diminishing else np.full(iters, alpha0)
-    x, acc, test_err, z_err = _scan_dgd(
-        jnp.asarray(problem.O),
-        jnp.asarray(problem.T),
-        W,
-        jnp.asarray(x_star.astype(problem.O.dtype)),
-        jnp.asarray(problem.O_test),
-        jnp.asarray(problem.T_test),
-        jnp.asarray(steps.astype(problem.O.dtype)),
-    )
+    arrays = _dgd_arrays(problem, net, alpha0, iters, diminishing)
+    x, acc, test_err, z_err = _scan_dgd(*(jnp.asarray(a) for a in arrays))
     return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
 
 
-@jax.jit
-def _scan_dgd(O, T, W, x_star, O_test, T_test, steps):
+def run_dgd_batch(
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    alpha0s: Sequence[float],
+    iters: int,
+    diminishing: bool = True,
+) -> List[Trace]:
+    runs = [
+        _dgd_arrays(p, n, a, iters, diminishing)
+        for p, n, a in zip(problems, nets, alpha0s)
+    ]
+    out = _scan_dgd_batched(*_stack(runs))
+    x, acc, test_err, z_err = (np.asarray(o) for o in out)
+    return [
+        _trace(acc[r], test_err[r], z_err[r], 2 * nets[r].E, x[r], x[r].mean(0))
+        for r in range(len(runs))
+    ]
+
+
+def _scan_dgd_impl(O, T, W, x_star, O_test, T_test, steps):
     N, b, p = O.shape
     d = T.shape[2]
     xs_norm = jnp.linalg.norm(x_star)
@@ -238,29 +345,54 @@ def _scan_dgd(O, T, W, x_star, O_test, T_test, steps):
     return x, *out
 
 
+_scan_dgd = jax.jit(_scan_dgd_impl)
+_scan_dgd_batched = _batched(_scan_dgd_impl, ())
+
+
+def _extra_arrays(problem: LeastSquaresProblem, net: Network, alpha: float):
+    dt = problem.O.dtype
+    return (
+        problem.O,
+        problem.T,
+        metropolis_weights(net).astype(dt),
+        problem.x_star().astype(dt),
+        problem.O_test,
+        problem.T_test,
+        np.asarray(alpha, dtype=dt),
+    )
+
+
 def run_extra(
     problem: LeastSquaresProblem,
     net: Network,
     alpha: float,
     iters: int,
 ) -> Trace:
-    W = jnp.asarray(metropolis_weights(net).astype(problem.O.dtype))
-    x_star = problem.x_star()
+    arrays = _extra_arrays(problem, net, alpha)
     x, acc, test_err, z_err = _scan_extra(
-        jnp.asarray(problem.O),
-        jnp.asarray(problem.T),
-        W,
-        jnp.asarray(x_star.astype(problem.O.dtype)),
-        jnp.asarray(problem.O_test),
-        jnp.asarray(problem.T_test),
-        float(alpha),
-        iters=iters,
+        *(jnp.asarray(a) for a in arrays), iters=iters
     )
     return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
 
 
-@partial(jax.jit, static_argnames=("iters",))
-def _scan_extra(O, T, W, x_star, O_test, T_test, alpha, *, iters):
+def run_extra_batch(
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    alphas: Sequence[float],
+    iters: int,
+) -> List[Trace]:
+    runs = [
+        _extra_arrays(p, n, a) for p, n, a in zip(problems, nets, alphas)
+    ]
+    out = _scan_extra_batched(*_stack(runs), iters=iters)
+    x, acc, test_err, z_err = (np.asarray(o) for o in out)
+    return [
+        _trace(acc[r], test_err[r], z_err[r], 2 * nets[r].E, x[r], x[r].mean(0))
+        for r in range(len(runs))
+    ]
+
+
+def _scan_extra_impl(O, T, W, x_star, O_test, T_test, alpha, *, iters):
     N, b, p = O.shape
     d = T.shape[2]
     xs_norm = jnp.linalg.norm(x_star)
@@ -285,3 +417,7 @@ def _scan_extra(O, T, W, x_star, O_test, T_test, alpha, *, iters):
 
     (_, x), out = jax.lax.scan(step, (x0, x1), None, length=iters)
     return x, *out
+
+
+_scan_extra = partial(jax.jit, static_argnames=("iters",))(_scan_extra_impl)
+_scan_extra_batched = _batched(_scan_extra_impl, ("iters",))

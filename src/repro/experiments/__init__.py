@@ -1,0 +1,33 @@
+"""Batched experiment engine: vmapped multi-seed / multi-config sweeps.
+
+The paper's figures are averages over many independent runs — topology
+seeds x straggler tolerances x schemes. This package turns such grids into
+first-class objects (DESIGN.md §7):
+
+- :mod:`repro.experiments.sweep` — `Case` (one fully-specified run),
+  `SweepSpec` (base case + axes -> Cartesian grid), and `run_sweep`, which
+  groups cases by jit static signature and executes each group as a single
+  vmapped `lax.scan` (one compile + one dispatch per group instead of one
+  serial scan per run).
+- :mod:`repro.experiments.registry` — named sweeps for the paper figures
+  (fig3/fig4/fig5) and beyond-paper grids (topology x S x scheme).
+- :mod:`repro.experiments.results` — mean/CI reduction over sweep axes and
+  CSV emission compatible with `benchmarks.common.Rows`.
+"""
+
+from .registry import SWEEPS, get_sweep
+from .results import emit_rows, mean_ci, reduce_mean, stack_field
+from .sweep import Case, SweepResult, SweepSpec, run_sweep
+
+__all__ = [
+    "Case",
+    "SweepSpec",
+    "SweepResult",
+    "run_sweep",
+    "SWEEPS",
+    "get_sweep",
+    "mean_ci",
+    "reduce_mean",
+    "stack_field",
+    "emit_rows",
+]

@@ -1,0 +1,90 @@
+"""Reduction + emission for sweep results (DESIGN.md §7).
+
+Mean/CI over the seed axis (the paper averages Figs. 3-5 over independent
+runs) and CSV emission compatible with `benchmarks.common.Rows`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .sweep import Case, SweepResult
+
+__all__ = ["stack_field", "mean_ci", "reduce_mean", "emit_rows"]
+
+
+def stack_field(traces: Sequence, field: str) -> np.ndarray:
+    """Stack one `Trace` field over runs -> (R, iters)."""
+    return np.stack([np.asarray(getattr(t, field)) for t in traces])
+
+
+def mean_ci(
+    values: np.ndarray, axis: int = 0, z: float = 1.96
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Mean and normal-approximation CI half-width along ``axis``."""
+    values = np.asarray(values)
+    n = values.shape[axis]
+    mean = values.mean(axis=axis)
+    if n < 2:
+        return mean, np.zeros_like(mean)
+    sem = values.std(axis=axis, ddof=1) / np.sqrt(n)
+    return mean, z * sem
+
+
+def reduce_mean(
+    result: SweepResult,
+    by: Sequence[str],
+    field: str = "accuracy",
+    z: float = 1.96,
+) -> Dict[tuple, dict]:
+    """Group cases by the ``by`` fields; mean/CI the rest (the seed axis).
+
+    Returns {key_tuple: {"mean": (iters,), "ci": (iters,), "n": int,
+    "cases": [Case, ...]}} with keys ordered by first appearance.
+    """
+    groups: Dict[tuple, List[int]] = {}
+    for i, c in enumerate(result.cases):
+        key = tuple(getattr(c, f) for f in by)
+        groups.setdefault(key, []).append(i)
+    out: Dict[tuple, dict] = {}
+    for key, idxs in groups.items():
+        stacked = stack_field([result.traces[i] for i in idxs], field)
+        mean, ci = mean_ci(stacked, axis=0, z=z)
+        out[key] = {
+            "mean": mean,
+            "ci": ci,
+            "n": len(idxs),
+            "cases": [result.cases[i] for i in idxs],
+        }
+    return out
+
+
+def emit_rows(
+    result: SweepResult,
+    rows,
+    prefix: str,
+    by: Sequence[str],
+    field: str = "accuracy",
+    extra: Optional[dict] = None,
+) -> Dict[tuple, dict]:
+    """Reduce and append one `benchmarks.common.Rows` row per group.
+
+    Row name is ``{prefix}/{method}[{by=value,...}]``; the derived column
+    records the final mean +- CI and the run count. Returns the reduction
+    so callers can also plot / post-process.
+    """
+    red = reduce_mean(result, by, field=field)
+    for key, r in red.items():
+        case = r["cases"][0]
+        kv = ",".join(f"{f}={v}" for f, v in zip(by, key) if f != "method")
+        name = f"{prefix}/{case.method}" + (f"[{kv}]" if kv else "")
+        derived = (
+            f"final_{field}={r['mean'][-1]:.5f};ci={r['ci'][-1]:.5f};"
+            f"runs={r['n']}"
+        )
+        if extra:
+            derived += "".join(f";{k}={v}" for k, v in extra.items())
+        rows.add(name, 0.0, derived)
+    return red

@@ -1,0 +1,355 @@
+"""Grid/axes spec -> batched vmapped run -> per-case traces (DESIGN.md §7).
+
+A `Case` pins down ONE run completely: method, dataset, topology, ADMM
+hyper-parameters, straggler model, and seed. A `SweepSpec` is a base case
+plus named axes; its Cartesian expansion is the grid. `run_sweep` groups
+the grid by jit *static signature* (everything that would force a fresh
+trace: shapes, K, mu, P, exact_x, iters, method) and executes each group
+as one `jax.vmap`-ed `lax.scan` — one compile and one device dispatch per
+group, however many (seed, config) pairs it contains. Host-side sampling
+(topology, data allocation, straggler times, decode vectors) stays
+per-run and is stacked into the batched scan's per-step inputs.
+
+Timing of the serial-vs-batched paths is recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import time
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.admm import (
+    ADMMConfig,
+    Trace,
+    admm_static_signature,
+    run_incremental_admm,
+    run_incremental_admm_batch,
+)
+from repro.core.baselines import (
+    run_dadmm,
+    run_dadmm_batch,
+    run_dgd,
+    run_dgd_batch,
+    run_extra,
+    run_extra_batch,
+    run_wadmm,
+    run_wadmm_batch,
+)
+from repro.core.graph import Network, make_network
+from repro.core.problems import DATASETS, LeastSquaresProblem, allocate
+from repro.core.straggler import StragglerModel
+
+__all__ = ["Case", "SweepSpec", "SweepResult", "run_sweep"]
+
+_cache_enabled = False
+
+
+def _enable_compilation_cache() -> None:
+    """Persistent XLA compilation cache: a sweep's one-trace-per-group
+    compile is its dominant cold cost, so repeat benchmark invocations
+    load the compiled scan from disk (EXPERIMENTS.md §Perf). Opt out with
+    REPRO_JAX_CACHE=0; relocate with REPRO_JAX_CACHE_DIR.
+    """
+    global _cache_enabled
+    if _cache_enabled or os.environ.get("REPRO_JAX_CACHE", "1") == "0":
+        return
+    _cache_enabled = True
+    try:
+        jax.config.update(
+            "jax_compilation_cache_dir",
+            os.environ.get("REPRO_JAX_CACHE_DIR", ".jax_cache"),
+        )
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+    except Exception:
+        pass  # older jax without the knobs: compile per process as before
+
+ADMM_METHODS = ("sI-ADMM", "csI-ADMM", "I-ADMM")
+BASELINE_METHODS = ("W-ADMM", "D-ADMM", "DGD", "EXTRA")
+METHODS = ADMM_METHODS + BASELINE_METHODS
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One fully-specified experiment run (hashable, so grids dedupe)."""
+
+    method: str = "sI-ADMM"  # one of METHODS
+    dataset: str = "usps"  # key of repro.core.problems.DATASETS
+    N: int = 10  # agents
+    K: int = 3  # ECNs per agent
+    connectivity: float = 0.5  # eta of make_network
+    seed: int = 0  # drives topology, data AND schedule sampling
+    iters: int = 1000
+    # (c)sI-ADMM hyper-parameters (paper §V defaults)
+    rho: float = 1.0
+    c_tau: float = 0.5
+    c_gamma: float = 1.0
+    M: int = 60
+    S: int = 0
+    scheme: str = "uncoded"
+    traversal: str = "hamiltonian"
+    # gossip/first-order baseline knobs
+    alpha: float = 0.05  # DGD/EXTRA step size; D-ADMM uses `rho`
+    # straggler model (defaults mirror StragglerModel so engine runs match
+    # run_incremental_admm(..., straggler=None) if core defaults move)
+    p_straggle: float = StragglerModel.p_straggle
+    delay: float = StragglerModel.delay
+    epsilon: float = StragglerModel.epsilon
+
+    def admm_config(self) -> ADMMConfig:
+        return ADMMConfig(
+            rho=self.rho,
+            c_tau=self.c_tau,
+            c_gamma=self.c_gamma,
+            M=self.M,
+            K=self.K,
+            S=self.S,
+            scheme=self.scheme,
+            exact_x=self.method == "I-ADMM",
+            traversal=self.traversal,
+            seed=self.seed,
+        )
+
+    def straggler_model(self) -> StragglerModel:
+        return StragglerModel(
+            p_straggle=self.p_straggle,
+            delay=self.delay,
+            epsilon=self.epsilon,
+        )
+
+    def label(self, *fields: str) -> str:
+        """Compact row label, e.g. ``csI-ADMM[S=2,seed=1]``."""
+        if not fields:
+            fields = ("dataset", "seed")
+        kv = ",".join(f"{f}={getattr(self, f)}" for f in fields)
+        return f"{self.method}[{kv}]"
+
+
+@dataclasses.dataclass
+class SweepSpec:
+    """Base case + named axes = a Cartesian experiment grid.
+
+    Axis values are either plain field values (axis name = field name) or
+    dicts of several field overrides applied together (axis name is just a
+    label), e.g.::
+
+        SweepSpec("fig5", Case(dataset="synthetic", K=6, M=360),
+                  axes={"S": [0, 1, 2, 3], "seed": range(4)},
+                  fixup=lambda c: dataclasses.replace(
+                      c, scheme="cyclic" if c.S else "uncoded"))
+    """
+
+    name: str
+    base: Case
+    axes: Mapping[str, Sequence] = dataclasses.field(default_factory=dict)
+    fixup: Optional[Callable[[Case], Case]] = None
+    description: str = ""
+
+    def cases(self) -> List[Case]:
+        names = list(self.axes)
+        cases: List[Case] = []
+        seen = set()
+        for combo in itertools.product(*(self.axes[n] for n in names)):
+            c = self.base
+            for name, value in zip(names, combo):
+                if isinstance(value, dict):
+                    c = dataclasses.replace(c, **value)
+                else:
+                    c = dataclasses.replace(c, **{name: value})
+            if self.fixup is not None:
+                c = self.fixup(c)
+            if c not in seen:  # fixups may merge grid points; dedupe
+                seen.add(c)
+                cases.append(c)
+        return cases
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-case traces + how the grid was batched onto the device."""
+
+    cases: List[Case]
+    traces: List[Trace]
+    groups: List[Tuple[tuple, int]]  # (static signature, n_runs) per group
+    wall_s: float
+
+    @property
+    def n_dispatches(self) -> int:
+        return len(self.groups)
+
+    def trace(self, **filters) -> Trace:
+        hits = [
+            t
+            for c, t in zip(self.cases, self.traces)
+            if all(getattr(c, k) == v for k, v in filters.items())
+        ]
+        if len(hits) != 1:
+            raise KeyError(f"{filters} matched {len(hits)} cases, want 1")
+        return hits[0]
+
+    def select(self, **filters) -> List[Tuple[Case, Trace]]:
+        return [
+            (c, t)
+            for c, t in zip(self.cases, self.traces)
+            if all(getattr(c, k) == v for k, v in filters.items())
+        ]
+
+
+# --------------------------------------------------------------------------
+# Case materialization (host-side, cached within one run_sweep call)
+# --------------------------------------------------------------------------
+
+
+def _materialize(
+    case: Case,
+    net_cache: Dict[tuple, Network],
+    prob_cache: Dict[tuple, LeastSquaresProblem],
+) -> Tuple[Network, LeastSquaresProblem]:
+    if case.dataset not in DATASETS:
+        raise KeyError(
+            f"unknown dataset {case.dataset!r}; known: {list(DATASETS)}"
+        )
+    nkey = (case.N, case.connectivity, case.seed)
+    net = net_cache.get(nkey)
+    if net is None:
+        net = net_cache[nkey] = make_network(
+            case.N, case.connectivity, seed=case.seed
+        )
+    pkey = (case.dataset, case.seed, case.N, case.K)
+    prob = prob_cache.get(pkey)
+    if prob is None:
+        prob = prob_cache[pkey] = allocate(
+            DATASETS[case.dataset](case.seed), case.N, case.K
+        )
+    return net, prob
+
+
+def _signature(case: Case, prob: LeastSquaresProblem) -> tuple:
+    """Everything that forces a fresh jit trace, per method family."""
+    if case.method in ADMM_METHODS:
+        return admm_static_signature(prob, case.admm_config()) + (case.iters,)
+    shapes = (
+        prob.N, prob.b, prob.p, prob.d, prob.O_test.shape[0], case.iters,
+    )
+    if case.method == "W-ADMM":
+        return ("wadmm", case.M) + shapes
+    # gossip baselines: only shapes + iters matter
+    return (case.method,) + shapes
+
+
+def _dispatch_group(
+    method: str,
+    cases: List[Case],
+    nets: List[Network],
+    probs: List[LeastSquaresProblem],
+    serial: bool,
+) -> List[Trace]:
+    iters = cases[0].iters
+    if method in ADMM_METHODS:
+        cfgs = [c.admm_config() for c in cases]
+        stragglers = [c.straggler_model() for c in cases]
+        if serial:
+            return [
+                run_incremental_admm(p, n, cf, iters, straggler=s)
+                for p, n, cf, s in zip(probs, nets, cfgs, stragglers)
+            ]
+        return run_incremental_admm_batch(
+            probs, nets, cfgs, iters, stragglers=stragglers
+        )
+    if method == "W-ADMM":
+        cfgs = [c.admm_config() for c in cases]
+        if serial:
+            return [
+                run_wadmm(p, n, cf, iters)
+                for p, n, cf in zip(probs, nets, cfgs)
+            ]
+        return run_wadmm_batch(probs, nets, cfgs, iters)
+    if method == "D-ADMM":
+        rhos = [c.rho for c in cases]
+        if serial:
+            return [
+                run_dadmm(p, n, r, iters)
+                for p, n, r in zip(probs, nets, rhos)
+            ]
+        return run_dadmm_batch(probs, nets, rhos, iters)
+    if method == "DGD":
+        alphas = [c.alpha for c in cases]
+        if serial:
+            return [
+                run_dgd(p, n, a, iters)
+                for p, n, a in zip(probs, nets, alphas)
+            ]
+        return run_dgd_batch(probs, nets, alphas, iters)
+    if method == "EXTRA":
+        alphas = [c.alpha for c in cases]
+        if serial:
+            return [
+                run_extra(p, n, a, iters)
+                for p, n, a in zip(probs, nets, alphas)
+            ]
+        return run_extra_batch(probs, nets, alphas, iters)
+    raise ValueError(f"unknown method {method!r}; known: {METHODS}")
+
+
+def run_sweep(
+    spec_or_cases, *, serial: bool = False, verbose: bool = False
+) -> SweepResult:
+    """Execute a sweep: one vmapped dispatch per static-signature group.
+
+    Args:
+      spec_or_cases: a `SweepSpec` or an explicit list of `Case`s.
+      serial: run each case through the per-run (seed) entry points instead
+        of the batched ones — the reference path for correctness tests and
+        the "before" column of the EXPERIMENTS.md §Perf timing table.
+      verbose: print one line per dispatched group.
+
+    Returns a `SweepResult` with traces in the original grid order.
+    """
+    cases = (
+        spec_or_cases.cases()
+        if isinstance(spec_or_cases, SweepSpec)
+        else list(spec_or_cases)
+    )
+    if not cases:
+        raise ValueError("empty sweep")
+    _enable_compilation_cache()
+
+    t0 = time.perf_counter()
+    net_cache: Dict[tuple, Network] = {}
+    prob_cache: Dict[tuple, LeastSquaresProblem] = {}
+    mats = [_materialize(c, net_cache, prob_cache) for c in cases]
+
+    # Group by static signature, preserving first-seen order.
+    groups: Dict[tuple, List[int]] = {}
+    for idx, (case, (net, prob)) in enumerate(zip(cases, mats)):
+        groups.setdefault(_signature(case, prob), []).append(idx)
+
+    traces: List[Optional[Trace]] = [None] * len(cases)
+    group_meta: List[Tuple[tuple, int]] = []
+    for sig, idxs in groups.items():
+        gcases = [cases[i] for i in idxs]
+        gnets = [mats[i][0] for i in idxs]
+        gprobs = [mats[i][1] for i in idxs]
+        if verbose:
+            print(
+                f"[sweep] {sig[0]} group x{len(idxs)} "
+                f"({'serial' if serial else 'vmapped'}): {sig[1:]}"
+            )
+        gtraces = _dispatch_group(
+            gcases[0].method, gcases, gnets, gprobs, serial
+        )
+        for i, tr in zip(idxs, gtraces):
+            traces[i] = tr
+        group_meta.append((sig, len(idxs)))
+
+    return SweepResult(
+        cases=cases,
+        traces=traces,  # type: ignore[arg-type]
+        groups=group_meta,
+        wall_s=time.perf_counter() - t0,
+    )

@@ -119,6 +119,8 @@ def run_one(
     t_compile = time.time() - t0
 
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):  # older jax: one dict per device
+        xla_cost = xla_cost[0] if xla_cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

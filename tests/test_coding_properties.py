@@ -1,0 +1,55 @@
+"""Hypothesis property tests for (K, R) MDS gradient coding (paper §III-B).
+
+Kept separate from ``test_coding.py`` so the deterministic coding tests run
+even when ``hypothesis`` is absent (it is an optional dev dependency; see
+``requirements-dev.txt``).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coding import cyclic_repetition_code, make_code
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    K=st.integers(3, 8),
+    S=st.integers(0, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_property_cyclic_any_R_of_K_decodes(K, S, seed):
+    """Property: for any valid (K, S), any R responses recover the exact sum."""
+    if S >= K:
+        S = K - 1
+    code = make_code("cyclic" if S else "uncoded", K, S, seed=seed)
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal((K, 3))
+    msgs = code.encode(g)
+    # random straggler pattern of size S
+    dead = rng.choice(K, size=S, replace=False)
+    alive = np.ones(K, dtype=bool)
+    alive[dead] = False
+    np.testing.assert_allclose(
+        code.decode(msgs, alive), g.sum(0), rtol=1e-8, atol=1e-8
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_property_decode_vector_in_rowspan(data):
+    """a^T B == 1^T exactly (the defining MDS gradient-code identity)."""
+    K = data.draw(st.integers(3, 7))
+    S = data.draw(st.integers(1, min(3, K - 1)))
+    seed = data.draw(st.integers(0, 1000))
+    code = cyclic_repetition_code(K, S, seed=seed)
+    rng = np.random.default_rng(seed)
+    dead = rng.choice(K, size=S, replace=False)
+    alive = np.ones(K, dtype=bool)
+    alive[dead] = False
+    a = code.decode_vector(alive)
+    np.testing.assert_allclose(a @ code.B, np.ones(K), atol=1e-7)
+    assert np.all(np.abs(a[~alive]) < 1e-12)  # only alive ECNs used

@@ -1,0 +1,182 @@
+"""Sweep-engine tests: vmapped grids must match per-run serial execution.
+
+The acceptance contract of the engine (DESIGN.md §7): executing a grid as
+batched vmapped scans is a pure performance transform — same seeds in,
+same traces out, elementwise. The fig5-style grid below is the paper's
+K x S x seed shape at smoke scale.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.admm import ADMMConfig, run_incremental_admm
+from repro.core.graph import make_network
+from repro.core.problems import DATASETS, allocate
+from repro.experiments import (
+    Case,
+    SweepSpec,
+    get_sweep,
+    mean_ci,
+    reduce_mean,
+    run_sweep,
+    stack_field,
+)
+from repro.experiments.sweep import _signature
+
+ITERS = 60
+
+
+def _fig5_style_spec(runs=2, S_values=(0, 1, 2)):
+    """K=6 grid like fig5, shrunk (usps standin, M=36) for test time."""
+    return SweepSpec(
+        "fig5_smoke",
+        Case(
+            method="csI-ADMM", dataset="usps", N=5, K=6, M=36,
+            scheme="cyclic", iters=ITERS,
+        ),
+        axes={"S": list(S_values), "seed": list(range(runs))},
+        fixup=lambda c: dataclasses.replace(
+            c, scheme="uncoded" if c.S == 0 else c.scheme
+        ),
+    )
+
+
+def test_grid_expansion_and_dedupe():
+    spec = _fig5_style_spec(runs=3)
+    cases = spec.cases()
+    assert len(cases) == 9
+    assert {c.S for c in cases} == {0, 1, 2}
+    assert all(c.scheme == ("uncoded" if c.S == 0 else "cyclic") for c in cases)
+    # dict-valued axes + fixup dedupe: two axis points collapsing to the
+    # same case appear once
+    spec2 = SweepSpec(
+        "dedupe",
+        Case(),
+        axes={"scheme": [{"S": 0, "scheme": "uncoded"},
+                         {"S": 0, "scheme": "cyclic"}]},
+        fixup=lambda c: dataclasses.replace(c, scheme="uncoded"),
+    )
+    assert len(spec2.cases()) == 1
+
+
+def test_vmapped_matches_serial_elementwise():
+    """Same seeds -> same traces, vmapped vs the per-run seed entry point."""
+    spec = _fig5_style_spec(runs=2)
+    batched = run_sweep(spec)
+    serial = run_sweep(spec, serial=True)
+    assert batched.cases == serial.cases
+    for case, tb, ts in zip(batched.cases, batched.traces, serial.traces):
+        for field in ("accuracy", "test_error", "z_err", "comm_cost",
+                      "sim_time", "final_x", "final_z"):
+            np.testing.assert_allclose(
+                getattr(tb, field), getattr(ts, field),
+                rtol=1e-5, atol=1e-5, err_msg=f"{case} field={field}",
+            )
+
+
+def test_vmapped_matches_direct_seed_api():
+    """Engine output == calling run_incremental_admm by hand (the seed
+    implementation the figure scripts used before the engine existed)."""
+    spec = _fig5_style_spec(runs=2, S_values=(0, 1))
+    result = run_sweep(spec)
+    for case, tr in zip(result.cases, result.traces):
+        net = make_network(case.N, case.connectivity, seed=case.seed)
+        prob = allocate(DATASETS[case.dataset](case.seed), case.N, case.K)
+        ref = run_incremental_admm(
+            prob, net, case.admm_config(), case.iters,
+            straggler=case.straggler_model(),
+        )
+        np.testing.assert_allclose(
+            tr.accuracy, ref.accuracy, rtol=1e-5, atol=1e-5,
+            err_msg=str(case),
+        )
+
+
+def test_single_dispatch_per_static_group():
+    """The whole S x seed grid costs ONE batched dispatch: the sub-batch
+    size mu = M/((S+1)K) is a runtime input of the masked batched scan,
+    so different S values share a static signature (and one jit trace)."""
+    spec = _fig5_style_spec(runs=3)
+    result = run_sweep(spec)
+    assert len(result.cases) == 9
+    assert result.n_dispatches == 1
+    assert [n for _, n in result.groups] == [9]
+    sigs = {_signature(c, allocate(DATASETS[c.dataset](c.seed), c.N, c.K))
+            for c in result.cases}
+    assert len(sigs) == 1
+
+
+def test_baseline_methods_batch_and_match():
+    cases = [
+        Case(method=m, dataset="usps", N=5, K=3, M=33, iters=40, seed=s)
+        for m in ("W-ADMM", "D-ADMM", "DGD", "EXTRA")
+        for s in (0, 1)
+    ]
+    batched = run_sweep(cases)
+    serial = run_sweep(cases, serial=True)
+    assert batched.n_dispatches == 4  # one vmapped dispatch per method
+    for case, tb, ts in zip(cases, batched.traces, serial.traces):
+        np.testing.assert_allclose(
+            tb.accuracy, ts.accuracy, rtol=1e-5, atol=1e-5,
+            err_msg=str(case),
+        )
+        np.testing.assert_allclose(tb.comm_cost, ts.comm_cost)
+
+
+def test_mean_reduction_matches_numpy():
+    spec = _fig5_style_spec(runs=3)
+    result = run_sweep(spec)
+    red = reduce_mean(result, by=("S",))
+    assert set(red) == {(0,), (1,), (2,)}
+    for (S,), r in red.items():
+        runs = stack_field(
+            [t for c, t in zip(result.cases, result.traces) if c.S == S],
+            "accuracy",
+        )
+        assert r["n"] == 3
+        np.testing.assert_allclose(r["mean"], runs.mean(axis=0))
+        # CI: 1.96 * sample std / sqrt(n)
+        np.testing.assert_allclose(
+            r["ci"], 1.96 * runs.std(axis=0, ddof=1) / np.sqrt(3)
+        )
+    # n=1 groups get zero-width CI
+    m, ci = mean_ci(np.ones((1, 5)))
+    np.testing.assert_allclose(ci, 0.0)
+
+
+def test_mixed_statics_rejected_by_core_batch():
+    from repro.core.admm import run_incremental_admm_batch
+
+    nets = [make_network(5, 0.5, seed=s) for s in (0, 1)]
+    probs = [allocate(DATASETS["usps"](s), 5, k) for s, k in ((0, 3), (1, 6))]
+    cfgs = [ADMMConfig(M=12, K=3, seed=0), ADMMConfig(M=12, K=6, seed=1)]
+    with pytest.raises(ValueError, match="static signatures"):
+        run_incremental_admm_batch(probs, nets, cfgs, 10)
+
+    # ...but mixed mini-batch sizes M (hence mixed mu) batch fine: mu is a
+    # runtime input of the masked batched scan, not a jit static.
+    probs = [allocate(DATASETS["usps"](s), 5, 3) for s in (0, 1)]
+    cfgs = [ADMMConfig(M=12, K=3, seed=0), ADMMConfig(M=24, K=3, seed=1)]
+    traces = run_incremental_admm_batch(probs, nets, cfgs, 20)
+    for prob, net, cfg, tr in zip(probs, nets, cfgs, traces):
+        ref = run_incremental_admm(prob, net, cfg, 20)
+        np.testing.assert_allclose(
+            tr.accuracy, ref.accuracy, rtol=1e-5, atol=1e-5
+        )
+
+
+def test_registry_sweeps_resolve():
+    from repro.experiments import SWEEPS
+
+    for name in SWEEPS:
+        spec = get_sweep(name, iters=8, runs=1)
+        cases = spec.cases()
+        assert cases, name
+        for c in cases:
+            if c.method in ("sI-ADMM", "csI-ADMM", "I-ADMM"):
+                c.admm_config().validate()
+
+    with pytest.raises(KeyError):
+        get_sweep("nonexistent")

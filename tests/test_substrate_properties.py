@@ -1,0 +1,37 @@
+"""Hypothesis property tests for the coded data-partition layout.
+
+Kept separate from ``test_substrate.py`` so substrate tests run even when
+``hypothesis`` is absent (optional dev dependency; see
+``requirements-dev.txt``).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coding import make_code
+from repro.data import partition_for_code
+
+
+@given(
+    b=st.integers(6, 4096),
+    K=st.integers(1, 6),
+    S=st.integers(0, 2),
+)
+@settings(max_examples=60, deadline=None)
+def test_partition_supports_cover_everything(b, K, S):
+    """Property: every partition is stored by >= S+1 ECNs (repetition), so
+    any S stragglers leave at least one live copy of every partition."""
+    if S >= K or K % (S + 1) != 0 or b < K:
+        return
+    scheme = "fractional" if S else "uncoded"
+    code = make_code(scheme, K, S)
+    boundaries, supports = partition_for_code(b, code)
+    assert boundaries[-1] == (b // K) * K
+    counts = np.zeros(K, dtype=int)
+    for sup in supports:
+        counts[sup] += 1
+    assert (counts >= S + 1).all()

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Verify every DESIGN.md / EXPERIMENTS.md citation in the code resolves.
+
+Code and benchmarks cite documentation sections as ``DESIGN.md §N`` or
+``EXPERIMENTS.md §Name`` (plus the quoted ``EXPERIMENTS.md 'Paper
+claims'`` form). This script greps ``src/`` and ``benchmarks/`` for such
+references and fails if the cited section heading does not exist in the
+doc. Run via ``make docs-check``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks")
+DOCS = ("DESIGN.md", "EXPERIMENTS.md")
+
+# DESIGN.md §3  /  EXPERIMENTS.md §Perf  /  EXPERIMENTS.md 'Paper claims'
+REF_RE = re.compile(
+    r"(DESIGN\.md|EXPERIMENTS\.md)\s+(?:§(\w+)|'([^']+)'|\"([^\"]+)\")"
+)
+
+
+def doc_sections(doc_path: pathlib.Path) -> set:
+    """Section anchors: '§N'-style tokens and quoted names from headings."""
+    sections = set()
+    for line in doc_path.read_text().splitlines():
+        if not line.startswith("#"):
+            continue
+        heading = line.lstrip("#").strip()
+        # "## §7 Batched experiment engine" -> anchor "7"
+        m = re.match(r"§(\w+)\b", heading)
+        if m:
+            sections.add(m.group(1))
+        # "## Perf" / "## Paper claims" -> anchors "Perf", "Paper claims"
+        sections.add(heading)
+        first = heading.split()[0] if heading.split() else ""
+        sections.add(first)
+    return sections
+
+
+def main() -> int:
+    docs = {}
+    missing_docs = []
+    for name in DOCS:
+        path = ROOT / name
+        if path.exists():
+            docs[name] = doc_sections(path)
+        else:
+            missing_docs.append(name)
+
+    errors = []
+    n_refs = 0
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            text = path.read_text()
+            for m in REF_RE.finditer(text):
+                doc, para, squote, dquote = m.groups()
+                target = para or squote or dquote
+                n_refs += 1
+                rel = path.relative_to(ROOT)
+                if doc in missing_docs:
+                    errors.append(f"{rel}: cites {doc} which does not exist")
+                    continue
+                anchors = docs[doc]
+                if target in anchors or any(
+                    a.startswith(target) for a in anchors
+                ):
+                    continue
+                errors.append(
+                    f"{rel}: cites {doc} §{target!r} — no such section"
+                )
+
+    if errors:
+        print(f"docs-check: {len(errors)} broken citation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs-check: {n_refs} citations in {SCAN_DIRS} all resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
