@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Iterable, List, Tuple
 
@@ -41,6 +42,8 @@ def comm_to_accuracy(trace, target: float) -> float:
 class Rows:
     """Collects ``name,us_per_call,derived`` CSV rows."""
 
+    HEADER = "name,us_per_call,derived"
+
     def __init__(self):
         self.rows: List[Tuple[str, float, str]] = []
 
@@ -56,6 +59,14 @@ class Rows:
         self.rows.append((name, us, ""))
         return out
 
-    def emit(self):
+    def emit(self, fh=None):
+        """Print rows as CSV to ``fh`` (default stdout), without header."""
         for name, us, derived in self.rows:
-            print(f"{name},{us:.1f},{derived}")
+            print(f"{name},{us:.1f},{derived}", file=fh)
+
+    def write_csv(self, path: str):
+        """Persist header + rows to ``path`` (benchmarks.run --out)."""
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as fh:
+            print(self.HEADER, file=fh)
+            self.emit(fh)

@@ -6,9 +6,12 @@ dry-run records by ``python -m benchmarks.roofline``.
 
 Named sweeps from `repro.experiments.registry` run directly:
 
-  PYTHONPATH=src python -m benchmarks.run --sweep fig5
+  PYTHONPATH=src python -m benchmarks.run --sweep fig5 --out results/fig5.csv
   PYTHONPATH=src python -m benchmarks.run --sweep topology_grid --iters 400 --runs 2
+  PYTHONPATH=src python -m benchmarks.run --sweep privacy_grid,compression_grid
   PYTHONPATH=src python -m benchmarks.run --list-sweeps
+
+``--out FILE`` additionally persists the CSV rows (with header) to disk.
 """
 
 from __future__ import annotations
@@ -70,6 +73,8 @@ def main(argv=None) -> int:
     ap.add_argument("--serial", action="store_true",
                     help="run sweeps through the per-run serial path "
                     "(reference/timing baseline)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the CSV rows (with header) to FILE")
     args = ap.parse_args(argv)
 
     if args.list_sweeps:
@@ -105,8 +110,11 @@ def main(argv=None) -> int:
 
             kernels_micro.run(rows)
 
-    print("name,us_per_call,derived")
+    print(Rows.HEADER)
     rows.emit()
+    if args.out:
+        rows.write_csv(args.out)
+        print(f"# wrote {len(rows.rows)} rows to {args.out}", file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
     return 0
 

@@ -1,6 +1,6 @@
 """(Coded) stochastic incremental ADMM — paper Algorithms 1 & 2, eqs. (4)-(6).
 
-Implements, as jitted ``lax.scan`` loops over iterations:
+Covers, through the `repro.methods.admm.IncrementalADMM` kernel:
 
 - **I-ADMM** (eq. 4, from [34]): exact x-minimization (closed form for least
   squares), incremental token traversal.
@@ -11,10 +11,11 @@ Implements, as jitted ``lax.scan`` loops over iterations:
   (fractional/cyclic MDS repetition schemes, `repro.core.coding`); the agent
   decodes the exact mini-batch gradient from the fastest R = K - S responses.
 
-Straggler behaviour and decode vectors are sampled host-side per iteration
-(`repro.core.straggler`) and fed to the scan as per-step inputs; the scan
-itself performs the full encode -> (masked) decode computation so the coded
-data path is numerically exercised, not just simulated.
+This module owns the paper-facing pieces: the hyper-parameter config, the
+per-iteration trace record, and the host-side schedule sampling (agents,
+batches, decode vectors, timing — `make_schedule`). The ONE device step
+implementation lives in `repro.methods.admm` (DESIGN.md §8); serial and
+batched execution are derived from it by `repro.methods.driver`.
 
 Update equations (active agent i = i_k, all others frozen):
 
@@ -26,14 +27,11 @@ Update equations (active agent i = i_k, all others frozen):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .coding import GradientCode, make_code
+from .coding import GradientCode
 from .graph import Network
 from .problems import LeastSquaresProblem
 from .straggler import StragglerModel, sample_times
@@ -42,9 +40,7 @@ __all__ = [
     "ADMMConfig",
     "Trace",
     "run_incremental_admm",
-    "run_incremental_admm_batch",
     "make_schedule",
-    "admm_static_signature",
 ]
 
 
@@ -84,7 +80,7 @@ class Trace:
 
     accuracy: np.ndarray  # eq. (23) relative error
     test_error: np.ndarray  # MSE of the token z on the test set
-    comm_cost: np.ndarray  # cumulative units (1 per token hop)
+    comm_cost: np.ndarray  # cumulative units (1 per full token hop)
     sim_time: np.ndarray  # cumulative simulated seconds
     z_err: np.ndarray  # ||z - x*|| / ||x*||
     final_x: np.ndarray  # (N, p, d)
@@ -163,312 +159,6 @@ def make_schedule(
     )
 
 
-def _scan_admm_impl(
-    O: jax.Array,  # (N, b, p)
-    T: jax.Array,  # (N, b, d)
-    B: jax.Array,  # (K, K) encode matrix
-    x_star: jax.Array,  # (p, d)
-    O_test: jax.Array,
-    T_test: jax.Array,
-    agents: jax.Array,
-    offsets: jax.Array,
-    decode: jax.Array,
-    tau: jax.Array,
-    gamma: jax.Array,
-    rho: jax.Array,  # scalar
-    *,
-    mu: int,
-    P: int,
-    K: int,
-    N: int,
-    exact_x: bool,
-):
-    p, d = O.shape[2], T.shape[2]
-    x0 = jnp.zeros((N, p, d), O.dtype)
-    y0 = jnp.zeros((N, p, d), O.dtype)
-    z0 = jnp.zeros((p, d), O.dtype)
-    xs_norm = jnp.linalg.norm(x_star)
-
-    # Precomputed exact-solve operands (I-ADMM): (O^T O / b + rho I), O^T T / b
-    H = jnp.einsum("nbp,nbq->npq", O, O) / O.shape[1]
-    rhs0 = jnp.einsum("nbp,nbd->npd", O, T) / O.shape[1]
-    eye = jnp.eye(p, dtype=O.dtype)
-
-    def step(carry, inp):
-        x, y, z = carry
-        i, off, a, tk, gk = inp
-        Oi = O[i]
-        Ti = T[i]
-        xi, yi = x[i], y[i]
-
-        if exact_x:
-            # I-ADMM exact x-update (eq. 4a) -- full-batch least squares.
-            x_new = jnp.linalg.solve(
-                H[i] + rho * eye, rhs0[i] + rho * z + yi
-            )
-        else:
-            # Per-partition mini-batch gradients g~_t (Algorithms 1&2).
-            def pgrad(t):
-                Ob = jax.lax.dynamic_slice(Oi, (t * P + off, 0), (mu, p))
-                Tb = jax.lax.dynamic_slice(Ti, (t * P + off, 0), (mu, d))
-                return Ob.T @ (Ob @ xi - Tb) / mu
-
-            gbar = jax.vmap(pgrad)(jnp.arange(K))  # (K, p, d)
-            msgs = jnp.tensordot(B, gbar, axes=1)  # encode, (K, p, d)
-            G = jnp.tensordot(a, msgs, axes=1) / K  # decode + eq. (6)
-            # Proximal linearized x-update (eq. 5a).
-            x_new = (tk * xi + rho * z + yi - G) / (rho + tk)
-
-        y_new = yi + rho * gk * (z - x_new)  # eq. (5b)
-        z_new = z + ((x_new - xi) - (y_new - yi) / rho) / N  # eq. (4c)
-        x = x.at[i].set(x_new)
-        y = y.at[i].set(y_new)
-
-        acc = jnp.mean(
-            jnp.linalg.norm(
-                (x - x_star[None]).reshape(N, -1), axis=1
-            )
-            / jnp.maximum(xs_norm, 1e-12)
-        )
-        r = O_test @ z_new - T_test
-        test_err = jnp.mean(jnp.sum(r * r, axis=-1))
-        z_err = jnp.linalg.norm(z_new - x_star) / jnp.maximum(xs_norm, 1e-12)
-        return (x, y, z_new), (acc, test_err, z_err)
-
-    (x, y, z), (acc, test_err, z_err) = jax.lax.scan(
-        step, (x0, y0, z0), (agents, offsets, decode, tau, gamma)
-    )
-    return x, z, acc, test_err, z_err
-
-
-_scan_admm = partial(
-    jax.jit, static_argnames=("mu", "P", "K", "N", "exact_x")
-)(_scan_admm_impl)
-
-
-def _scan_admm_masked_impl(
-    O,  # (N, b, p)
-    T,
-    B,
-    x_star,
-    O_test,
-    T_test,
-    agents,
-    offsets,
-    decode,
-    tau,
-    gamma,
-    rho,  # scalar
-    mu,  # scalar int — RUNTIME input (serial path has it static)
-    *,
-    MU: int,  # static upper bound of mu across the batch
-    P: int,
-    K: int,
-    N: int,
-    exact_x: bool,
-):
-    """Per-run scan with a *traced* sub-batch size mu (DESIGN.md §7).
-
-    The engine-side variant of :func:`_scan_admm_impl`: the per-partition
-    mini-batch is a fixed-size MU-row gather with rows >= mu zero-masked
-    (adding exact zeros to the gradient sums), so runs with different
-    straggler tolerance S — hence different mu = M/((S+1)K) — share ONE
-    compiled trace and batch into ONE vmapped dispatch. Test error uses
-    the precomputed Gram/cross matrices of the test set (identical
-    algebra to ``O_test @ z`` residuals, p x p per step instead of
-    n_test x p), since the per-step test matmul dominates the serial
-    scan's runtime (EXPERIMENTS.md §Perf).
-    """
-    p, d = O.shape[2], T.shape[2]
-    b = O.shape[1]
-    x0 = jnp.zeros((N, p, d), O.dtype)
-    y0 = jnp.zeros((N, p, d), O.dtype)
-    z0 = jnp.zeros((p, d), O.dtype)
-    xs_norm = jnp.linalg.norm(x_star)
-    n_test = O_test.shape[0]
-    Gt = O_test.T @ O_test  # (p, p)
-    Ct = O_test.T @ T_test  # (p, d)
-    TTt = jnp.sum(T_test * T_test)
-    rows = jnp.arange(MU)
-    valid = (rows < mu).astype(O.dtype)  # (MU,)
-    inv_mu = 1.0 / mu.astype(O.dtype)
-    # Flat views: per-step mini-batches gather the K*MU needed rows
-    # straight out of the (N*b, p) pool instead of first copying the
-    # active agent's whole (b, p) block — the block copy dominates the
-    # serial scan's step time.
-    O_flat = O.reshape(N * b, p)
-    T_flat = T.reshape(N * b, d)
-    # Encode->decode collapses to per-partition weights: the decoded
-    # mini-batch gradient (eq. 6) is
-    #   G = (1/K) sum_j a_j sum_t B[j,t] g~_t = sum_t w_t g~_t,
-    #   w = (a^T B) / K,
-    # so the whole coded data path is ONE row-weighted gradient. Masked
-    # rows (>= mu) get weight exactly 0, which also kills their clamped
-    # out-of-bounds gathers. w is per-step data, computed in one matmul.
-    W_steps = (decode @ B) / K  # (iters, K)
-    part = jnp.arange(K)  # partition index per gather block
-
-    if exact_x:
-        H = jnp.einsum("nbp,nbq->npq", O, O) / O.shape[1]
-        rhs0 = jnp.einsum("nbp,nbd->npd", O, T) / O.shape[1]
-        eye = jnp.eye(p, dtype=O.dtype)
-
-    def step(carry, inp):
-        x, y, z = carry
-        i, off, w, tk, gk = inp
-        xi, yi = x[i], y[i]
-
-        if exact_x:
-            x_new = jnp.linalg.solve(
-                H[i] + rho * eye, rhs0[i] + rho * z + yi
-            )
-        else:
-            # One gather of all K partitions' sub-batches; OOB rows clamp
-            # at the pool end and carry weight 0.
-            idx = (i * b + part[:, None] * P + off + rows[None, :]).reshape(-1)
-            Ob = O_flat[idx]  # (K*MU, p)
-            Tb = T_flat[idx]  # (K*MU, d)
-            c = ((w * inv_mu)[:, None] * valid[None, :]).reshape(-1, 1)
-            G = Ob.T @ (c * (Ob @ xi - Tb))  # decoded eq. (6) gradient
-            x_new = (tk * xi + rho * z + yi - G) / (rho + tk)
-
-        y_new = yi + rho * gk * (z - x_new)  # eq. (5b)
-        z_new = z + ((x_new - xi) - (y_new - yi) / rho) / N  # eq. (4c)
-        x = x.at[i].set(x_new)
-        y = y.at[i].set(y_new)
-
-        acc = jnp.mean(
-            jnp.linalg.norm(
-                (x - x_star[None]).reshape(N, -1), axis=1
-            )
-            / jnp.maximum(xs_norm, 1e-12)
-        )
-        # ||O z - T||^2 / n = (z'Gz - 2<z, C> + ||T||^2) / n
-        test_err = (
-            jnp.einsum("pd,pq,qd->", z_new, Gt, z_new)
-            - 2.0 * jnp.vdot(z_new, Ct)
-            + TTt
-        ) / n_test
-        z_err = jnp.linalg.norm(z_new - x_star) / jnp.maximum(xs_norm, 1e-12)
-        return (x, y, z_new), (acc, test_err, z_err)
-
-    (x, y, z), (acc, test_err, z_err) = jax.lax.scan(
-        step, (x0, y0, z0), (agents, offsets, W_steps, tau, gamma)
-    )
-    return x, z, acc, test_err, z_err
-
-
-@partial(jax.jit, static_argnames=("MU", "P", "K", "N", "exact_x"))
-def _scan_admm_batched(
-    O,  # (R, N, b, p) — leading runs axis on every array argument
-    T,
-    B,
-    x_star,
-    O_test,
-    T_test,
-    agents,
-    offsets,
-    decode,
-    tau,
-    gamma,
-    rho,  # (R,)
-    mu,  # (R,)
-    *,
-    MU: int,
-    P: int,
-    K: int,
-    N: int,
-    exact_x: bool,
-):
-    """One compiled trace for a whole grid of runs (DESIGN.md §7).
-
-    Every array input carries a leading runs axis R; the per-run masked
-    scan is ``vmap``-ed over it, so R (seed, config) pairs — including
-    runs with different S / mini-batch sizes — execute as a single
-    vectorized ``lax.scan``.
-    """
-    f = partial(
-        _scan_admm_masked_impl, MU=MU, P=P, K=K, N=N, exact_x=exact_x
-    )
-    return jax.vmap(f)(
-        O, T, B, x_star, O_test, T_test,
-        agents, offsets, decode, tau, gamma, rho, mu,
-    )
-
-
-def admm_static_signature(problem: LeastSquaresProblem, cfg: ADMMConfig) -> tuple:
-    """Hashable key of everything that forces a fresh jit trace.
-
-    Runs with equal signatures can be stacked on a leading axis and
-    executed by a single `_scan_admm_batched` call (DESIGN.md §7). The
-    sub-batch size mu is deliberately NOT part of the key — the batched
-    scan takes it as a runtime input, so a whole S sweep (fig5) shares
-    one trace.
-    """
-    P = problem.b // cfg.K
-    return (
-        "admm",
-        problem.N, problem.b, problem.p, problem.d,
-        problem.O_test.shape[0],
-        cfg.K, P, cfg.exact_x,
-    )
-
-
-def _prepare_run(
-    problem: LeastSquaresProblem,
-    net: Network,
-    cfg: ADMMConfig,
-    iters: int,
-    straggler: Optional[StragglerModel],
-    code: Optional[GradientCode],
-) -> dict:
-    """Host-side per-run arrays + statics shared by serial/batched entry."""
-    cfg.validate()
-    straggler = straggler or StragglerModel()
-    code = code or make_code(cfg.scheme, cfg.K, cfg.S, seed=cfg.seed)
-    if code.K != cfg.K or code.S != cfg.S:
-        raise ValueError("code does not match config (K, S)")
-
-    sched = make_schedule(cfg, net, code, straggler, iters, problem.b)
-    dt = problem.O.dtype
-    x_star = problem.x_star()
-    return dict(
-        arrays=(
-            problem.O,
-            problem.T,
-            code.B.astype(dt),
-            x_star.astype(dt),
-            problem.O_test,
-            problem.T_test,
-            sched["agents"],
-            sched["offsets"],
-            sched["decode"].astype(dt),
-            sched["tau"].astype(dt),
-            sched["gamma"].astype(dt),
-            np.asarray(cfg.rho, dtype=dt),
-        ),
-        statics=dict(
-            mu=sched["mu"], P=sched["P"], K=cfg.K, N=problem.N,
-            exact_x=cfg.exact_x,
-        ),
-        # One token hop per activation; response + link time per iteration.
-        comm=np.cumsum(np.ones(iters)),
-        sim_time=np.cumsum(sched["resp_time"] + sched["link_time"]),
-    )
-
-
-def _to_trace(run: dict, x, z, acc, test_err, z_err) -> Trace:
-    return Trace(
-        accuracy=np.asarray(acc),
-        test_error=np.asarray(test_err),
-        comm_cost=run["comm"],
-        sim_time=run["sim_time"],
-        z_err=np.asarray(z_err),
-        final_x=np.asarray(x),
-        final_z=np.asarray(z),
-    )
-
-
 def run_incremental_admm(
     problem: LeastSquaresProblem,
     net: Network,
@@ -477,62 +167,17 @@ def run_incremental_admm(
     straggler: Optional[StragglerModel] = None,
     code: Optional[GradientCode] = None,
 ) -> Trace:
-    """Run I-/sI-/csI-ADMM for ``iters`` activations and return the trace."""
-    run = _prepare_run(problem, net, cfg, iters, straggler, code)
-    out = _scan_admm(
-        *(jnp.asarray(a) for a in run["arrays"]), **run["statics"]
-    )
-    return _to_trace(run, *out)
+    """Run I-/sI-/csI-ADMM for ``iters`` activations and return the trace.
 
-
-def run_incremental_admm_batch(
-    problems: Sequence[LeastSquaresProblem],
-    nets: Sequence[Network],
-    cfgs: Sequence[ADMMConfig],
-    iters: int,
-    stragglers: Optional[Sequence[Optional[StragglerModel]]] = None,
-    codes: Optional[Sequence[Optional[GradientCode]]] = None,
-) -> List[Trace]:
-    """Run R (problem, net, cfg) triples as ONE vmapped scan (DESIGN.md §7).
-
-    All runs must share the same static signature
-    (:func:`admm_static_signature`) — same shapes, K, mu, P, exact_x — so
-    the whole batch costs a single jit trace and a single device dispatch.
-    Per-run randomness (topology, data, straggler times, decode vectors)
-    lives in the stacked array inputs. Raises ValueError on mixed statics;
-    callers wanting heterogeneous grids should group first
-    (`repro.experiments.sweep` does exactly that).
+    Thin serial entry over the method kernel (lazy import: `repro.methods`
+    imports this module for the config/trace/schedule types).
     """
-    R = len(problems)
-    if not (len(nets) == len(cfgs) == R):
-        raise ValueError("problems, nets, cfgs must have equal length")
-    stragglers = stragglers if stragglers is not None else [None] * R
-    codes = codes if codes is not None else [None] * R
+    from repro.methods import get_kernel, run_serial
+    from repro.methods.admm import ADMMRun
 
-    sigs = {admm_static_signature(p, c) for p, c in zip(problems, cfgs)}
-    if len(sigs) != 1:
-        raise ValueError(
-            f"batch mixes {len(sigs)} static signatures; group runs by "
-            "admm_static_signature() first"
-        )
-
-    runs = [
-        _prepare_run(p, n, c, iters, s, cd)
-        for p, n, c, s, cd in zip(problems, nets, cfgs, stragglers, codes)
-    ]
-    stacked = tuple(
-        jnp.asarray(np.stack([r["arrays"][i] for r in runs]))
-        for i in range(len(runs[0]["arrays"]))
+    # sI-/csI-/I-ADMM are one registered kernel instance; the behavioral
+    # switches (exact_x, scheme, S) all live in cfg.
+    return run_serial(
+        get_kernel("sI-ADMM"), problem, net, ADMMRun(cfg, straggler, code),
+        iters,
     )
-    mus = np.asarray([r["statics"]["mu"] for r in runs])
-    statics = {
-        k: v for k, v in runs[0]["statics"].items() if k not in ("mu", "P")
-    }
-    out = _scan_admm_batched(
-        *stacked, jnp.asarray(mus),
-        MU=int(mus.max()), P=runs[0]["statics"]["P"], **statics,
-    )
-    out = [np.asarray(o) for o in out]
-    return [
-        _to_trace(run, *(o[r] for o in out)) for r, run in enumerate(runs)
-    ]

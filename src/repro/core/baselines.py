@@ -13,22 +13,17 @@
 All baselines run on the same `LeastSquaresProblem` and report the same
 metrics as `repro.core.admm` (accuracy eq. 23, test error, cumulative
 communication units) so the benchmark figures are directly comparable.
-Gossip baselines use full local gradients (as in the original methods);
-incremental baselines use the same stochastic oracle as sI-ADMM.
+
+These are thin serial entry points over the method kernels
+(`repro.methods.walkman`, `repro.methods.gossip`) — each algorithm has
+exactly ONE step implementation, and batched execution is the `vmap`
+derivation of the same step (`repro.methods.driver`, DESIGN.md §8).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import List, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from .admm import ADMMConfig, Trace
-from .graph import Network, metropolis_weights
+from .graph import Network
 from .problems import LeastSquaresProblem
 
 __all__ = [
@@ -36,87 +31,7 @@ __all__ = [
     "run_dadmm",
     "run_dgd",
     "run_extra",
-    "run_wadmm_batch",
-    "run_dadmm_batch",
-    "run_dgd_batch",
-    "run_extra_batch",
 ]
-
-
-def _batched(impl, static_names):
-    """jit(vmap(impl)) with the given keyword statics (DESIGN.md §7)."""
-
-    @partial(jax.jit, static_argnames=static_names)
-    def batched(*arrays, **statics):
-        return jax.vmap(partial(impl, **statics))(*arrays)
-
-    return batched
-
-
-def _stack(runs: Sequence[tuple]):
-    return tuple(
-        jnp.asarray(np.stack([np.asarray(r[i]) for r in runs]))
-        for i in range(len(runs[0]))
-    )
-
-
-def _metrics(x, z_mean, x_star, xs_norm, O_test, T_test, N):
-    acc = jnp.mean(
-        jnp.linalg.norm((x - x_star[None]).reshape(N, -1), axis=1)
-        / jnp.maximum(xs_norm, 1e-12)
-    )
-    r = O_test @ z_mean - T_test
-    test_err = jnp.mean(jnp.sum(r * r, axis=-1))
-    z_err = jnp.linalg.norm(z_mean - x_star) / jnp.maximum(xs_norm, 1e-12)
-    return acc, test_err, z_err
-
-
-def _trace(acc, test_err, z_err, comm_per_iter, x, z) -> Trace:
-    iters = len(np.asarray(acc))
-    comm = np.cumsum(np.full(iters, float(comm_per_iter)))
-    return Trace(
-        accuracy=np.asarray(acc),
-        test_error=np.asarray(test_err),
-        comm_cost=comm,
-        sim_time=np.zeros(iters),
-        z_err=np.asarray(z_err),
-        final_x=np.asarray(x),
-        final_z=np.asarray(z),
-    )
-
-
-# --------------------------------------------------------------------------
-# W-ADMM (Walkman) — random-walk incremental ADMM
-# --------------------------------------------------------------------------
-
-
-def _walk_arrays(problem: LeastSquaresProblem, net: Network, cfg: ADMMConfig, iters: int):
-    N, b = problem.N, problem.b
-    rng = np.random.default_rng(cfg.seed)
-    # Random walk over neighbors.
-    agents = np.zeros(iters, dtype=np.int32)
-    cur = int(rng.integers(N))
-    for k in range(iters):
-        agents[k] = cur
-        cur = int(rng.choice(net.neighbors(cur)))
-    M = cfg.M
-    nb = max(b // M, 1)
-    offsets = ((np.arange(iters) // N % nb) * M).astype(np.int32)
-    tau = cfg.c_tau * np.sqrt(np.arange(1, iters + 1))
-    gamma = cfg.c_gamma / np.sqrt(np.arange(1, iters + 1))
-    dt = problem.O.dtype
-    return (
-        problem.O,
-        problem.T,
-        problem.x_star().astype(dt),
-        problem.O_test,
-        problem.T_test,
-        agents,
-        offsets,
-        tau.astype(dt),
-        gamma.astype(dt),
-        np.asarray(cfg.rho, dtype=dt),
-    )
 
 
 def run_wadmm(
@@ -126,86 +41,9 @@ def run_wadmm(
     iters: int,
 ) -> Trace:
     """Walkman with the same stochastic proximal-linearized x-update."""
-    arrays = _walk_arrays(problem, net, cfg, iters)
-    x, z, acc, test_err, z_err = _scan_walk(
-        *(jnp.asarray(a) for a in arrays), M=cfg.M, N=problem.N
-    )
-    return _trace(acc, test_err, z_err, 1.0, x, z)
+    from repro.methods import get_kernel, run_serial
 
-
-def run_wadmm_batch(
-    problems: Sequence[LeastSquaresProblem],
-    nets: Sequence[Network],
-    cfgs: Sequence[ADMMConfig],
-    iters: int,
-) -> List[Trace]:
-    """All runs as one vmapped scan; requires uniform (M, N, shapes)."""
-    sigs = {(c.M, p.N, p.O.shape, p.T.shape) for p, c in zip(problems, cfgs)}
-    if len(sigs) != 1:
-        raise ValueError(f"batch mixes static signatures: {sigs}")
-    runs = [
-        _walk_arrays(p, n, c, iters)
-        for p, n, c in zip(problems, nets, cfgs)
-    ]
-    out = _scan_walk_batched(*_stack(runs), M=cfgs[0].M, N=problems[0].N)
-    out = [np.asarray(o) for o in out]
-    return [
-        _trace(*(o[r] for o in out[2:]), 1.0, out[0][r], out[1][r])
-        for r in range(len(runs))
-    ]
-
-
-def _scan_walk_impl(O, T, x_star, O_test, T_test, agents, offsets, tau, gamma, rho, *, M, N):
-    p, d = O.shape[2], T.shape[2]
-    x0 = jnp.zeros((N, p, d), O.dtype)
-    y0 = jnp.zeros((N, p, d), O.dtype)
-    z0 = jnp.zeros((p, d), O.dtype)
-    xs_norm = jnp.linalg.norm(x_star)
-
-    def step(carry, inp):
-        x, y, z = carry
-        i, off, tk, gk = inp
-        zero = jnp.zeros((), off.dtype)
-        Ob = jax.lax.dynamic_slice(O[i], (off, zero), (M, p))
-        Tb = jax.lax.dynamic_slice(T[i], (off, zero), (M, d))
-        xi, yi = x[i], y[i]
-        G = Ob.T @ (Ob @ xi - Tb) / M
-        x_new = (tk * xi + rho * z + yi - G) / (rho + tk)
-        y_new = yi + rho * gk * (z - x_new)
-        z_new = z + ((x_new - xi) - (y_new - yi) / rho) / N
-        x = x.at[i].set(x_new)
-        y = y.at[i].set(y_new)
-        return (x, y, z_new), _metrics(
-            x, z_new, x_star, xs_norm, O_test, T_test, N
-        )
-
-    (x, y, z), out = jax.lax.scan(
-        step, (x0, y0, z0), (agents, offsets, tau, gamma)
-    )
-    return x, z, *out
-
-
-_scan_walk = partial(jax.jit, static_argnames=("M", "N"))(_scan_walk_impl)
-_scan_walk_batched = _batched(_scan_walk_impl, ("M", "N"))
-
-
-# --------------------------------------------------------------------------
-# D-ADMM — gossip decentralized consensus ADMM
-# --------------------------------------------------------------------------
-
-
-def _dadmm_arrays(problem: LeastSquaresProblem, net: Network, rho: float):
-    dt = problem.O.dtype
-    return (
-        problem.O,
-        problem.T,
-        net.adjacency.astype(dt),
-        net.degree().astype(dt),
-        problem.x_star().astype(dt),
-        problem.O_test,
-        problem.T_test,
-        np.asarray(rho, dtype=dt),
-    )
+    return run_serial(get_kernel("W-ADMM"), problem, net, cfg, iters)
 
 
 def run_dadmm(
@@ -214,85 +52,9 @@ def run_dadmm(
     rho: float,
     iters: int,
 ) -> Trace:
-    arrays = _dadmm_arrays(problem, net, rho)
-    x, acc, test_err, z_err = _scan_dadmm(
-        *(jnp.asarray(a) for a in arrays), iters=iters
-    )
-    return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
+    from repro.methods import get_kernel, run_serial
 
-
-def run_dadmm_batch(
-    problems: Sequence[LeastSquaresProblem],
-    nets: Sequence[Network],
-    rhos: Sequence[float],
-    iters: int,
-) -> List[Trace]:
-    runs = [
-        _dadmm_arrays(p, n, r) for p, n, r in zip(problems, nets, rhos)
-    ]
-    out = _scan_dadmm_batched(*_stack(runs), iters=iters)
-    x, acc, test_err, z_err = (np.asarray(o) for o in out)
-    return [
-        _trace(acc[r], test_err[r], z_err[r], 2 * nets[r].E, x[r], x[r].mean(0))
-        for r in range(len(runs))
-    ]
-
-
-def _scan_dadmm_impl(O, T, A, deg, x_star, O_test, T_test, rho, *, iters):
-    N, b, p = O.shape
-    d = T.shape[2]
-    xs_norm = jnp.linalg.norm(x_star)
-    H = jnp.einsum("nbp,nbq->npq", O, O) / b  # (N, p, p)
-    rhs0 = jnp.einsum("nbp,nbd->npd", O, T) / b
-    eye = jnp.eye(p, dtype=O.dtype)
-    # Per-agent solve operator: (H_i + 2 rho d_i I)
-    Hs = H + 2.0 * rho * deg[:, None, None] * eye[None]
-
-    def step(carry, _):
-        x, alpha = carry
-        nbr_sum = jnp.einsum("ij,jpd->ipd", A, x)
-        rhs = rhs0 + rho * (deg[:, None, None] * x + nbr_sum) - alpha
-        x_new = jnp.linalg.solve(Hs, rhs)
-        nbr_sum_new = jnp.einsum("ij,jpd->ipd", A, x_new)
-        alpha = alpha + rho * (deg[:, None, None] * x_new - nbr_sum_new)
-        z_mean = x_new.mean(0)
-        return (x_new, alpha), _metrics(
-            x_new, z_mean, x_star, xs_norm, O_test, T_test, N
-        )
-
-    x0 = jnp.zeros((N, p, d), O.dtype)
-    (x, _), out = jax.lax.scan(step, (x0, x0), None, length=iters)
-    return x, *out
-
-
-_scan_dadmm = partial(jax.jit, static_argnames=("iters",))(_scan_dadmm_impl)
-_scan_dadmm_batched = _batched(_scan_dadmm_impl, ("iters",))
-
-
-# --------------------------------------------------------------------------
-# DGD and EXTRA — gossip first-order methods
-# --------------------------------------------------------------------------
-
-
-def _dgd_arrays(
-    problem: LeastSquaresProblem, net: Network, alpha0: float, iters: int,
-    diminishing: bool,
-):
-    dt = problem.O.dtype
-    steps = (
-        alpha0 / np.sqrt(np.arange(1, iters + 1))
-        if diminishing
-        else np.full(iters, alpha0)
-    )
-    return (
-        problem.O,
-        problem.T,
-        metropolis_weights(net).astype(dt),
-        problem.x_star().astype(dt),
-        problem.O_test,
-        problem.T_test,
-        steps.astype(dt),
-    )
+    return run_serial(get_kernel("D-ADMM"), problem, net, rho, iters)
 
 
 def run_dgd(
@@ -302,63 +64,10 @@ def run_dgd(
     iters: int,
     diminishing: bool = True,
 ) -> Trace:
-    arrays = _dgd_arrays(problem, net, alpha0, iters, diminishing)
-    x, acc, test_err, z_err = _scan_dgd(*(jnp.asarray(a) for a in arrays))
-    return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
+    from repro.methods import get_kernel, run_serial
 
-
-def run_dgd_batch(
-    problems: Sequence[LeastSquaresProblem],
-    nets: Sequence[Network],
-    alpha0s: Sequence[float],
-    iters: int,
-    diminishing: bool = True,
-) -> List[Trace]:
-    runs = [
-        _dgd_arrays(p, n, a, iters, diminishing)
-        for p, n, a in zip(problems, nets, alpha0s)
-    ]
-    out = _scan_dgd_batched(*_stack(runs))
-    x, acc, test_err, z_err = (np.asarray(o) for o in out)
-    return [
-        _trace(acc[r], test_err[r], z_err[r], 2 * nets[r].E, x[r], x[r].mean(0))
-        for r in range(len(runs))
-    ]
-
-
-def _scan_dgd_impl(O, T, W, x_star, O_test, T_test, steps):
-    N, b, p = O.shape
-    d = T.shape[2]
-    xs_norm = jnp.linalg.norm(x_star)
-
-    def grad(x):
-        return jnp.einsum("nbp,nbd->npd", O, jnp.einsum("nbp,npd->nbd", O, x) - T) / b
-
-    def step(x, alpha):
-        x_new = jnp.einsum("ij,jpd->ipd", W, x) - alpha * grad(x)
-        return x_new, _metrics(
-            x_new, x_new.mean(0), x_star, xs_norm, O_test, T_test, N
-        )
-
-    x0 = jnp.zeros((N, p, d), O.dtype)
-    x, out = jax.lax.scan(step, x0, steps)
-    return x, *out
-
-
-_scan_dgd = jax.jit(_scan_dgd_impl)
-_scan_dgd_batched = _batched(_scan_dgd_impl, ())
-
-
-def _extra_arrays(problem: LeastSquaresProblem, net: Network, alpha: float):
-    dt = problem.O.dtype
-    return (
-        problem.O,
-        problem.T,
-        metropolis_weights(net).astype(dt),
-        problem.x_star().astype(dt),
-        problem.O_test,
-        problem.T_test,
-        np.asarray(alpha, dtype=dt),
+    return run_serial(
+        get_kernel("DGD"), problem, net, (alpha0, diminishing), iters
     )
 
 
@@ -368,56 +77,6 @@ def run_extra(
     alpha: float,
     iters: int,
 ) -> Trace:
-    arrays = _extra_arrays(problem, net, alpha)
-    x, acc, test_err, z_err = _scan_extra(
-        *(jnp.asarray(a) for a in arrays), iters=iters
-    )
-    return _trace(acc, test_err, z_err, 2 * net.E, x, np.asarray(x).mean(0))
+    from repro.methods import get_kernel, run_serial
 
-
-def run_extra_batch(
-    problems: Sequence[LeastSquaresProblem],
-    nets: Sequence[Network],
-    alphas: Sequence[float],
-    iters: int,
-) -> List[Trace]:
-    runs = [
-        _extra_arrays(p, n, a) for p, n, a in zip(problems, nets, alphas)
-    ]
-    out = _scan_extra_batched(*_stack(runs), iters=iters)
-    x, acc, test_err, z_err = (np.asarray(o) for o in out)
-    return [
-        _trace(acc[r], test_err[r], z_err[r], 2 * nets[r].E, x[r], x[r].mean(0))
-        for r in range(len(runs))
-    ]
-
-
-def _scan_extra_impl(O, T, W, x_star, O_test, T_test, alpha, *, iters):
-    N, b, p = O.shape
-    d = T.shape[2]
-    xs_norm = jnp.linalg.norm(x_star)
-    W_tilde = 0.5 * (jnp.eye(N, dtype=O.dtype) + W)
-
-    def grad(x):
-        return jnp.einsum("nbp,nbd->npd", O, jnp.einsum("nbp,npd->nbd", O, x) - T) / b
-
-    x0 = jnp.zeros((N, p, d), O.dtype)
-    x1 = jnp.einsum("ij,jpd->ipd", W, x0) - alpha * grad(x0)
-
-    def step(carry, _):
-        x_prev, x_cur = carry
-        x_next = (
-            jnp.einsum("ij,jpd->ipd", jnp.eye(N, dtype=O.dtype) + W, x_cur)
-            - jnp.einsum("ij,jpd->ipd", W_tilde, x_prev)
-            - alpha * (grad(x_cur) - grad(x_prev))
-        )
-        return (x_cur, x_next), _metrics(
-            x_next, x_next.mean(0), x_star, xs_norm, O_test, T_test, N
-        )
-
-    (_, x), out = jax.lax.scan(step, (x0, x1), None, length=iters)
-    return x, *out
-
-
-_scan_extra = partial(jax.jit, static_argnames=("iters",))(_scan_extra_impl)
-_scan_extra_batched = _batched(_scan_extra_impl, ("iters",))
+    return run_serial(get_kernel("EXTRA"), problem, net, alpha, iters)

@@ -183,7 +183,7 @@ class ConsensusRuntime:
         ftype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
         Bm = self.B_enc.astype(ftype)[None] * alive[..., None].astype(ftype)
         ones = jnp.ones((cfg.K,), ftype)
-        a = jax.vmap(lambda M: jnp.linalg.pinv(M.T, rcond=1e-6) @ ones)(Bm)
+        a = jax.vmap(lambda M: jnp.linalg.pinv(M.T, rtol=1e-6) @ ones)(Bm)
         a = a.astype(jnp.float32)
         # w[a, j, u, :] = a_j * B[j, sup(j)[u]] / (K * P)
         w = (

@@ -160,6 +160,62 @@ def topology_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
     )
 
 
+def privacy_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
+    """Beyond-paper: pI-ADMM privacy noise x straggler tolerance grid.
+
+    Gaussian primal perturbation (arXiv 2003.10615) with std decaying as
+    sigma/sqrt(k), crossed with the coded straggler tolerance S — the
+    privacy mechanism and the coding layer compose because the kernel
+    inherits the full csI-ADMM data path (DESIGN.md §8). sigma=0 is the
+    exact sI-/csI-ADMM iterate path (the noise-free control arm).
+    """
+    return SweepSpec(
+        "privacy_grid",
+        Case(
+            method="pI-ADMM", dataset="usps", K=3, M=60, scheme="cyclic",
+            iters=iters,
+        ),
+        axes={
+            "sigma": [0.0, 0.01, 0.05, 0.2],
+            "S": [0, 1],
+            "seed": list(range(runs)),
+        },
+        fixup=_coded_scheme,
+        description="privacy noise sigma x straggler tolerance S for pI-ADMM",
+    )
+
+
+def compression_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
+    """Beyond-paper: cq-sI-ADMM token compression x topology grid.
+
+    Quantized (4/8-bit stochastic) and top-k sparsified token updates
+    (arXiv 2501.13516) with error feedback, across sparse/medium/dense
+    topologies (shortest-path-cycle traversal, so connectivity bites via
+    relay hops — same rationale as `topology_grid`). comm_cost rows
+    account compressed hops at their true bit cost including side
+    information (top-k indices, quantization sign + scale; see
+    `repro.methods.compression`), so accuracy-vs-communication
+    comparisons against sI-ADMM are honest.
+    """
+    return SweepSpec(
+        "compression_grid",
+        Case(
+            method="cq-sI-ADMM", dataset="usps", K=3, M=60, iters=iters,
+            traversal="shortest_path",
+        ),
+        axes={
+            "compressor": [
+                {"compressor": "quant", "bits": 4},
+                {"compressor": "quant", "bits": 8},
+                {"compressor": "topk", "frac": 0.25},
+            ],
+            "connectivity": [0.3, 0.6, 0.9],
+            "seed": list(range(runs)),
+        },
+        description="token compression (bits / top-k) x topology grid",
+    )
+
+
 SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig3_minibatch": fig3_minibatch,
     "fig3_baselines": fig3_baselines,
@@ -168,6 +224,8 @@ SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig4_stragglers": fig4_stragglers,
     "fig5": fig5,
     "topology_grid": topology_grid,
+    "privacy_grid": privacy_grid,
+    "compression_grid": compression_grid,
 }
 
 

@@ -4,7 +4,8 @@ A `Case` pins down ONE run completely: method, dataset, topology, ADMM
 hyper-parameters, straggler model, and seed. A `SweepSpec` is a base case
 plus named axes; its Cartesian expansion is the grid. `run_sweep` groups
 the grid by jit *static signature* (everything that would force a fresh
-trace: shapes, K, mu, P, exact_x, iters, method) and executes each group
+trace: shapes, K, P, exact_x, iters, method kernel — see
+`MethodKernel.static_signature`, DESIGN.md §8) and executes each group
 as one `jax.vmap`-ed `lax.scan` — one compile and one device dispatch per
 group, however many (seed, config) pairs it contains. Host-side sampling
 (topology, data allocation, straggler times, decode vectors) stays
@@ -24,26 +25,11 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.admm import (
-    ADMMConfig,
-    Trace,
-    admm_static_signature,
-    run_incremental_admm,
-    run_incremental_admm_batch,
-)
-from repro.core.baselines import (
-    run_dadmm,
-    run_dadmm_batch,
-    run_dgd,
-    run_dgd_batch,
-    run_extra,
-    run_extra_batch,
-    run_wadmm,
-    run_wadmm_batch,
-)
+from repro.core.admm import ADMMConfig, Trace
 from repro.core.graph import Network, make_network
 from repro.core.problems import DATASETS, LeastSquaresProblem, allocate
 from repro.core.straggler import StragglerModel
+from repro.methods import KERNELS, get_kernel, run_batch, run_serial
 
 __all__ = ["Case", "SweepSpec", "SweepResult", "run_sweep"]
 
@@ -69,9 +55,8 @@ def _enable_compilation_cache() -> None:
     except Exception:
         pass  # older jax without the knobs: compile per process as before
 
-ADMM_METHODS = ("sI-ADMM", "csI-ADMM", "I-ADMM")
-BASELINE_METHODS = ("W-ADMM", "D-ADMM", "DGD", "EXTRA")
-METHODS = ADMM_METHODS + BASELINE_METHODS
+# Every registered method kernel is sweepable (DESIGN.md §8).
+METHODS = tuple(KERNELS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +80,12 @@ class Case:
     traversal: str = "hamiltonian"
     # gossip/first-order baseline knobs
     alpha: float = 0.05  # DGD/EXTRA step size; D-ADMM uses `rho`
+    # pI-ADMM (privacy) knob
+    sigma: float = 0.01  # primal perturbation std at k=1
+    # cq-sI-ADMM (compressed token) knobs
+    compressor: str = "topk"  # "topk" | "quant"
+    frac: float = 0.25  # topk: fraction of token entries kept
+    bits: int = 8  # quant: bits per transmitted entry
     # straggler model (defaults mirror StragglerModel so engine runs match
     # run_incremental_admm(..., straggler=None) if core defaults move)
     p_straggle: float = StragglerModel.p_straggle
@@ -230,16 +221,9 @@ def _materialize(
 
 
 def _signature(case: Case, prob: LeastSquaresProblem) -> tuple:
-    """Everything that forces a fresh jit trace, per method family."""
-    if case.method in ADMM_METHODS:
-        return admm_static_signature(prob, case.admm_config()) + (case.iters,)
-    shapes = (
-        prob.N, prob.b, prob.p, prob.d, prob.O_test.shape[0], case.iters,
-    )
-    if case.method == "W-ADMM":
-        return ("wadmm", case.M) + shapes
-    # gossip baselines: only shapes + iters matter
-    return (case.method,) + shapes
+    """Everything that forces a fresh jit trace: the kernel's static key."""
+    kernel = get_kernel(case.method)
+    return kernel.static_signature(prob, kernel.config(case), case.iters)
 
 
 def _dispatch_group(
@@ -249,51 +233,16 @@ def _dispatch_group(
     probs: List[LeastSquaresProblem],
     serial: bool,
 ) -> List[Trace]:
+    """Registry lookup + the derived serial/batched driver (DESIGN.md §8)."""
+    kernel = get_kernel(method)
     iters = cases[0].iters
-    if method in ADMM_METHODS:
-        cfgs = [c.admm_config() for c in cases]
-        stragglers = [c.straggler_model() for c in cases]
-        if serial:
-            return [
-                run_incremental_admm(p, n, cf, iters, straggler=s)
-                for p, n, cf, s in zip(probs, nets, cfgs, stragglers)
-            ]
-        return run_incremental_admm_batch(
-            probs, nets, cfgs, iters, stragglers=stragglers
-        )
-    if method == "W-ADMM":
-        cfgs = [c.admm_config() for c in cases]
-        if serial:
-            return [
-                run_wadmm(p, n, cf, iters)
-                for p, n, cf in zip(probs, nets, cfgs)
-            ]
-        return run_wadmm_batch(probs, nets, cfgs, iters)
-    if method == "D-ADMM":
-        rhos = [c.rho for c in cases]
-        if serial:
-            return [
-                run_dadmm(p, n, r, iters)
-                for p, n, r in zip(probs, nets, rhos)
-            ]
-        return run_dadmm_batch(probs, nets, rhos, iters)
-    if method == "DGD":
-        alphas = [c.alpha for c in cases]
-        if serial:
-            return [
-                run_dgd(p, n, a, iters)
-                for p, n, a in zip(probs, nets, alphas)
-            ]
-        return run_dgd_batch(probs, nets, alphas, iters)
-    if method == "EXTRA":
-        alphas = [c.alpha for c in cases]
-        if serial:
-            return [
-                run_extra(p, n, a, iters)
-                for p, n, a in zip(probs, nets, alphas)
-            ]
-        return run_extra_batch(probs, nets, alphas, iters)
-    raise ValueError(f"unknown method {method!r}; known: {METHODS}")
+    cfgs = [kernel.config(c) for c in cases]
+    if serial:
+        return [
+            run_serial(kernel, p, n, cf, iters)
+            for p, n, cf in zip(probs, nets, cfgs)
+        ]
+    return run_batch(kernel, probs, nets, cfgs, iters)
 
 
 def run_sweep(

@@ -1,0 +1,40 @@
+"""Method kernels: one pure step function per algorithm (DESIGN.md §8).
+
+Each consensus optimization method is a `MethodKernel` — host-side
+``prepare`` plus pure ``setup``/``init``/``step``/``final`` — and every
+execution backend is derived from it by `repro.methods.driver`:
+``run_serial`` (one jitted ``lax.scan`` per run) and ``run_batch``
+(``vmap`` of the same scan over a leading runs axis). Importing this
+package populates the `KERNELS` registry:
+
+  sI-ADMM / csI-ADMM / I-ADMM  (paper Algorithms 1 & 2, eq. 4)
+  W-ADMM, D-ADMM, DGD, EXTRA   (paper §V-A baselines)
+  pI-ADMM                      (privacy-perturbed, arXiv 2003.10615)
+  cq-sI-ADMM                   (compressed token, arXiv 2501.13516)
+"""
+
+from .admm import ADMMRun, IncrementalADMM
+from .base import KERNELS, MethodKernel, Prepared, get_kernel, register
+from .compression import CompressionRun
+from .driver import run_batch, run_serial
+from .gossip import DADMM, DGD, EXTRA
+from .privacy import PrivacyRun
+from .walkman import WalkmanADMM
+
+__all__ = [
+    "MethodKernel",
+    "Prepared",
+    "KERNELS",
+    "register",
+    "get_kernel",
+    "run_serial",
+    "run_batch",
+    "ADMMRun",
+    "PrivacyRun",
+    "CompressionRun",
+    "IncrementalADMM",
+    "WalkmanADMM",
+    "DADMM",
+    "DGD",
+    "EXTRA",
+]

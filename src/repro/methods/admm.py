@@ -1,0 +1,232 @@
+"""Incremental (c)sI-/I-ADMM as a MethodKernel (paper Algorithms 1 & 2).
+
+The ONE step implementation for the whole ADMM family (DESIGN.md §8): the
+zero-weight-masked, flat-gather scan body that previously existed twice
+(a serial `dynamic_slice` variant and a masked batched clone) is now the
+canonical kernel, executed serially or vmapped by `repro.methods.driver`.
+
+Per step (active agent i = i_k, eqs. 5a/5b/4c):
+
+  x_i^{k+1} = (tau^k x_i^k + rho z^k + y_i^k - G_i) / (rho + tau^k)
+  y_i^{k+1} = y_i^k + rho gamma^k (z^k - x_i^{k+1})
+  z^{k+1}   = z^k + [ (x_i^{k+1}-x_i^k) - (y_i^{k+1}-y_i^k)/rho ] / N
+
+with G_i the decoded mini-batch gradient (eq. 6). The coded
+encode->decode path collapses host-side to per-partition weights
+w = (a^T B)/K, so the device step is one row-weighted gradient; the
+sub-batch size mu = M/((S+1)K) is a *runtime* input masked against the
+static bound MU, which is what lets a whole straggler-tolerance sweep
+share one jit trace (DESIGN.md §7). I-ADMM (exact_x) replaces the
+stochastic x-update with the closed-form full-batch solve (eq. 4a).
+
+Subclass hooks ``_perturb_x`` (pI-ADMM, `repro.methods.privacy`) and
+``_token_update`` (cq-sI-ADMM, `repro.methods.compression`) extend the
+family without touching the drivers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admm import ADMMConfig, make_schedule
+from repro.core.coding import GradientCode, make_code
+from repro.core.graph import Network
+from repro.core.problems import LeastSquaresProblem
+from repro.core.straggler import StragglerModel
+
+from .base import MethodKernel, Prepared, register
+
+__all__ = ["ADMMRun", "IncrementalADMM", "ADMM_KERNEL"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMRun:
+    """Per-run config of the ADMM family: hyper-params + timing model."""
+
+    cfg: ADMMConfig
+    straggler: Optional[StragglerModel] = None
+    code: Optional[GradientCode] = None
+
+
+class IncrementalADMM(MethodKernel):
+    """sI-ADMM / csI-ADMM / I-ADMM (ONE kernel, three registry names).
+
+    The behavioral switches (exact_x, scheme, S) all live in the
+    `ADMMConfig`, so a single instance serves all three paper names and
+    ``name`` is the family tag — mixed sI/csI grids with equal shapes
+    share a static signature and batch into one dispatch, exactly like
+    the pre-refactor family key."""
+
+    name = "admm"
+
+    # -- host side ---------------------------------------------------------
+
+    def config(self, case) -> ADMMRun:
+        return ADMMRun(case.admm_config(), case.straggler_model())
+
+    def static_signature(
+        self, problem: LeastSquaresProblem, run: ADMMRun, iters: int
+    ) -> tuple:
+        cfg = run.cfg
+        return (
+            self.name,
+            problem.N, problem.b, problem.p, problem.d,
+            problem.O_test.shape[0],
+            cfg.K, problem.b // cfg.K, cfg.exact_x, iters,
+        )
+
+    def prepare(
+        self,
+        problem: LeastSquaresProblem,
+        net: Network,
+        run: ADMMRun,
+        iters: int,
+    ) -> Prepared:
+        cfg = run.cfg
+        cfg.validate()
+        straggler = run.straggler or StragglerModel()
+        code = run.code or make_code(cfg.scheme, cfg.K, cfg.S, seed=cfg.seed)
+        if code.K != cfg.K or code.S != cfg.S:
+            raise ValueError("code does not match config (K, S)")
+
+        sched = make_schedule(cfg, net, code, straggler, iters, problem.b)
+        dt = problem.O.dtype
+        # Encode->decode folds to per-partition weights host-side: the
+        # decoded mini-batch gradient (eq. 6) is
+        #   G = (1/K) sum_j a_j sum_t B[j,t] g~_t = sum_t w_t g~_t.
+        W_steps = (sched["decode"].astype(dt) @ code.B.astype(dt)) / cfg.K
+        return Prepared(
+            consts=(
+                problem.O,
+                problem.T,
+                problem.x_star().astype(dt),
+                problem.O_test,
+                problem.T_test,
+                np.asarray(cfg.rho, dtype=dt),
+                np.asarray(sched["mu"], dtype=np.int32),
+            ),
+            steps=self._extra_steps(
+                run, problem, iters,
+                (
+                    sched["agents"],
+                    sched["offsets"],
+                    W_steps,
+                    sched["tau"].astype(dt),
+                    sched["gamma"].astype(dt),
+                ),
+            ),
+            statics=self._statics(run, problem, iters, sched),
+            max_statics=dict(MU=int(sched["mu"])),
+            # One token hop per activation; response + link time per iter.
+            comm=np.cumsum(np.full(iters, self._comm_per_iter(run, problem))),
+            sim_time=np.cumsum(sched["resp_time"] + sched["link_time"]),
+        )
+
+    def _statics(self, run: ADMMRun, problem, iters, sched) -> dict:
+        return dict(
+            name=self.name, iters=iters, P=sched["P"], K=run.cfg.K,
+            N=problem.N, exact_x=run.cfg.exact_x,
+        )
+
+    def _extra_steps(self, run: ADMMRun, problem, iters, steps: tuple) -> tuple:
+        """Hook: subclasses append host-sampled per-step arrays (noise)."""
+        return steps
+
+    def _comm_per_iter(self, run: ADMMRun, problem) -> float:
+        return 1.0
+
+    # -- device side -------------------------------------------------------
+
+    def setup(self, consts, statics):
+        O, T, x_star, O_test, T_test, rho, mu = consts
+        N, b, p = O.shape
+        d = T.shape[2]
+        MU = statics["MU"]
+        rows = jnp.arange(MU)
+        aux = dict(
+            x_star=x_star,
+            xs_norm=jnp.linalg.norm(x_star),
+            # test error via the test set's Gram/cross matrices: p x p per
+            # step instead of n_test x p (EXPERIMENTS.md §Perf).
+            Gt=O_test.T @ O_test,
+            Ct=O_test.T @ T_test,
+            TTt=jnp.sum(T_test * T_test),
+            n_test=O_test.shape[0],
+            # Flat views: per-step mini-batches gather the K*MU needed rows
+            # straight out of the (N*b, p) pool instead of copying the
+            # active agent's whole (b, p) block.
+            O_flat=O.reshape(N * b, p),
+            T_flat=T.reshape(N * b, d),
+            rows=rows,
+            valid=(rows < mu).astype(O.dtype),
+            inv_mu=1.0 / mu.astype(O.dtype),
+            part=jnp.arange(statics["K"]),
+            rho=rho,
+            b=b,
+            shape=(N, p, d),
+            dtype=O.dtype,
+        )
+        if statics["exact_x"]:
+            # I-ADMM exact solve operands: (O^T O / b + rho I), O^T T / b.
+            aux["H"] = jnp.einsum("nbp,nbq->npq", O, O) / b
+            aux["rhs0"] = jnp.einsum("nbp,nbd->npd", O, T) / b
+            aux["eye"] = jnp.eye(p, dtype=O.dtype)
+        return aux
+
+    def init(self, aux, statics):
+        return self.xyz_state(aux)
+
+    def step(self, state, inp, aux, statics):
+        i, off, w, tk, gk = inp[0], inp[1], inp[2], inp[3], inp[4]
+        x, y, z = state["x"], state["y"], state["z"]
+        xi, yi = x[i], y[i]
+        rho = aux["rho"]
+        N = statics["N"]
+
+        if statics["exact_x"]:
+            x_new = jnp.linalg.solve(
+                aux["H"][i] + rho * aux["eye"], aux["rhs0"][i] + rho * z + yi
+            )
+        else:
+            # One gather of all K partitions' sub-batches; rows >= mu carry
+            # weight exactly 0 (their clamped OOB gathers contribute exact
+            # zeros to the gradient sums — batched == serial elementwise).
+            idx = (
+                i * aux["b"]
+                + aux["part"][:, None] * statics["P"]
+                + off
+                + aux["rows"][None, :]
+            ).reshape(-1)
+            Ob = aux["O_flat"][idx]  # (K*MU, p)
+            Tb = aux["T_flat"][idx]  # (K*MU, d)
+            c = (
+                (w * aux["inv_mu"])[:, None] * aux["valid"][None, :]
+            ).reshape(-1, 1)
+            G = Ob.T @ (c * (Ob @ xi - Tb))  # decoded eq. (6) gradient
+            x_new = (tk * xi + rho * z + yi - G) / (rho + tk)  # eq. (5a)
+
+        x_new = self._perturb_x(x_new, inp, aux, statics)
+        y_new = yi + rho * gk * (z - x_new)  # eq. (5b)
+        dz = ((x_new - xi) - (y_new - yi) / rho) / N  # eq. (4c) increment
+        state = dict(state, x=x.at[i].set(x_new), y=y.at[i].set(y_new))
+        state = self._token_update(state, dz, inp, aux, statics)
+        return state, self.metrics(state["x"], state["z"], aux)
+
+    def _perturb_x(self, x_new, inp, aux, statics):
+        """Hook: pI-ADMM adds Gaussian noise to the shared primal."""
+        return x_new
+
+    def _token_update(self, state, dz, inp, aux, statics):
+        """Hook: cq-sI-ADMM compresses the transmitted token increment."""
+        return dict(state, z=state["z"] + dz)
+
+    def final(self, state, aux, statics):
+        return state["x"], state["z"]
+
+
+ADMM_KERNEL = register(IncrementalADMM(), "sI-ADMM", "csI-ADMM", "I-ADMM")

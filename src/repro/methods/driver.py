@@ -1,0 +1,149 @@
+"""Execution backends derived from a MethodKernel (DESIGN.md §8).
+
+``run_serial`` executes one run as ``lax.scan(kernel.step)``;
+``run_batch`` executes R runs as ``vmap`` of the *same* composed scan —
+the batched engine is a pure performance transform of the serial path
+because both call literally the same step function. The third backend,
+the TPU mesh runtime (`repro.distributed.consensus`, DESIGN.md §3),
+shares the algorithmic core but owns its sharding-aware state layout.
+
+Jitted executables are cached per (kernel, statics) pair, on top of the
+persistent XLA compilation cache enabled by `repro.experiments.sweep`.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admm import Trace
+from repro.core.graph import Network
+from repro.core.problems import LeastSquaresProblem
+
+from .base import MethodKernel, Prepared
+
+__all__ = ["run_serial", "run_batch"]
+
+
+def _statics_key(statics: dict) -> tuple:
+    return tuple(sorted(statics.items()))
+
+
+def _compose(kernel: MethodKernel, statics_key: tuple):
+    """setup -> init -> scan(step) -> final as ONE pure run function."""
+    statics = dict(statics_key)
+
+    def run(consts, steps):
+        aux = kernel.setup(consts, statics)
+        state = kernel.init(aux, statics)
+
+        def body(s, inp):
+            return kernel.step(s, inp, aux, statics)
+
+        xs = steps if steps else None
+        length = None if steps else statics["iters"]
+        state, metrics = jax.lax.scan(body, state, xs, length=length)
+        x, z = kernel.final(state, aux, statics)
+        return x, z, metrics
+
+    return run
+
+
+@lru_cache(maxsize=None)
+def _serial_fn(kernel: MethodKernel, statics_key: tuple):
+    return jax.jit(_compose(kernel, statics_key))
+
+
+@lru_cache(maxsize=None)
+def _batch_fn(kernel: MethodKernel, statics_key: tuple):
+    return jax.jit(jax.vmap(_compose(kernel, statics_key)))
+
+
+def _to_trace(prep: Prepared, x, z, metrics) -> Trace:
+    acc, test_err, z_err = metrics
+    return Trace(
+        accuracy=np.asarray(acc),
+        test_error=np.asarray(test_err),
+        comm_cost=prep.comm,
+        sim_time=prep.sim_time,
+        z_err=np.asarray(z_err),
+        final_x=np.asarray(x),
+        final_z=np.asarray(z),
+    )
+
+
+def run_serial(
+    kernel: MethodKernel,
+    problem: LeastSquaresProblem,
+    net: Network,
+    cfg,
+    iters: int,
+) -> Trace:
+    """One run: jitted ``lax.scan`` of the kernel's step function."""
+    prep = kernel.prepare(problem, net, cfg, iters)
+    statics = {**prep.statics, **prep.max_statics}
+    fn = _serial_fn(kernel, _statics_key(statics))
+    x, z, metrics = fn(
+        tuple(jnp.asarray(c) for c in prep.consts),
+        tuple(jnp.asarray(s) for s in prep.steps),
+    )
+    return _to_trace(prep, x, z, metrics)
+
+
+def run_batch(
+    kernel: MethodKernel,
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    cfgs: Sequence,
+    iters: int,
+) -> List[Trace]:
+    """R runs as ONE vmapped scan — one jit trace, one device dispatch.
+
+    All runs must share the kernel's static signature; ``max_statics``
+    (e.g. the masked gather bound MU) are reconciled with ``max`` so runs
+    whose *runtime* value differs (mixed straggler tolerance S in a fig5
+    grid) still share the trace. Raises ValueError on mixed statics —
+    `repro.experiments.sweep.run_sweep` groups by signature first.
+    """
+    R = len(problems)
+    if not (len(nets) == len(cfgs) == R):
+        raise ValueError("problems, nets, cfgs must have equal length")
+    sigs = {
+        kernel.static_signature(p, c, iters)
+        for p, c in zip(problems, cfgs)
+    }
+    if len(sigs) != 1:
+        raise ValueError(
+            f"batch mixes {len(sigs)} static signatures; group runs by "
+            f"{kernel.name} static_signature() first"
+        )
+
+    preps = [
+        kernel.prepare(p, n, c, iters)
+        for p, n, c in zip(problems, nets, cfgs)
+    ]
+    statics = dict(preps[0].statics)
+    if any(pr.statics != statics for pr in preps[1:]):
+        raise ValueError("equal signatures produced unequal statics")
+    for key in preps[0].max_statics:
+        statics[key] = max(pr.max_statics[key] for pr in preps)
+
+    consts = tuple(
+        jnp.asarray(np.stack([np.asarray(pr.consts[i]) for pr in preps]))
+        for i in range(len(preps[0].consts))
+    )
+    steps = tuple(
+        jnp.asarray(np.stack([np.asarray(pr.steps[i]) for pr in preps]))
+        for i in range(len(preps[0].steps))
+    )
+    fn = _batch_fn(kernel, _statics_key(statics))
+    x, z, (acc, test_err, z_err) = fn(consts, steps)
+    out = [np.asarray(o) for o in (x, z, acc, test_err, z_err)]
+    return [
+        _to_trace(pr, out[0][r], out[1][r], (out[2][r], out[3][r], out[4][r]))
+        for r, pr in enumerate(preps)
+    ]

@@ -1,0 +1,210 @@
+"""Gossip baselines (D-ADMM, DGD, EXTRA) as MethodKernels (paper §V-A).
+
+Every agent updates every iteration using all its neighbors — 2|E|
+directed messages per iteration versus the incremental methods' single
+token hop. All three consume full local gradients, as in the original
+methods; the consensus model reported in metrics is the agent mean.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Network, metropolis_weights
+from repro.core.problems import LeastSquaresProblem
+
+from .base import MethodKernel, Prepared, register
+
+__all__ = ["DADMM", "DGD", "EXTRA", "D_ADMM_K", "DGD_K", "EXTRA_K"]
+
+
+def _lsq_consts(problem: LeastSquaresProblem, mix: np.ndarray, *scalars):
+    dt = problem.O.dtype
+    return (
+        problem.O,
+        problem.T,
+        mix.astype(dt),
+        problem.x_star().astype(dt),
+        problem.O_test,
+        problem.T_test,
+        *(np.asarray(s, dtype=dt) for s in scalars),
+    )
+
+
+class _GossipKernel(MethodKernel):
+    """Shared shape/metric plumbing for the all-agents-per-step methods."""
+
+    def static_signature(
+        self, problem: LeastSquaresProblem, cfg, iters: int
+    ) -> tuple:
+        return (
+            self.name,
+            problem.N, problem.b, problem.p, problem.d,
+            problem.O_test.shape[0], iters,
+        )
+
+    def _grad(self, aux, x):
+        """Stacked full local gradients (N, p, d)."""
+        O, T = aux["O"], aux["T"]
+        return (
+            jnp.einsum(
+                "nbp,nbd->npd", O, jnp.einsum("nbp,npd->nbd", O, x) - T
+            )
+            / aux["b"]
+        )
+
+    def final(self, state, aux, statics):
+        x = state["x"]
+        return x, x.mean(0)
+
+
+class DADMM(_GossipKernel):
+    """Gossip decentralized consensus ADMM [14]/[9] (exact local solves)."""
+
+    name = "D-ADMM"
+
+    def config(self, case) -> float:
+        return case.rho
+
+    def prepare(self, problem, net: Network, rho: float, iters: int):
+        dt = problem.O.dtype
+        consts = (
+            problem.O,
+            problem.T,
+            net.adjacency.astype(dt),
+            net.degree().astype(dt),
+            problem.x_star().astype(dt),
+            problem.O_test,
+            problem.T_test,
+            np.asarray(rho, dtype=dt),
+        )
+        return Prepared(
+            consts=consts,
+            steps=(),
+            statics=dict(name=self.name, iters=iters),
+            max_statics={},
+            comm=np.cumsum(np.full(iters, 2.0 * net.E)),
+            sim_time=np.zeros(iters),
+        )
+
+    def setup(self, consts, statics):
+        O, T, A, deg, x_star, O_test, T_test, rho = consts
+        aux = self.lsq_aux(O, T, x_star, O_test, T_test)
+        N, b, p = O.shape
+        H = jnp.einsum("nbp,nbq->npq", O, O) / b
+        eye = jnp.eye(p, dtype=O.dtype)
+        aux.update(
+            A=A, deg=deg, rho=rho,
+            rhs0=jnp.einsum("nbp,nbd->npd", O, T) / b,
+            # Per-agent solve operator: (H_i + 2 rho d_i I)
+            Hs=H + 2.0 * rho * deg[:, None, None] * eye[None],
+        )
+        return aux
+
+    def init(self, aux, statics):
+        N, p, d = aux["shape"]
+        zeros = jnp.zeros((N, p, d), aux["dtype"])
+        return dict(x=zeros, alpha=zeros)
+
+    def step(self, state, inp, aux, statics):
+        x, alpha = state["x"], state["alpha"]
+        A, deg, rho = aux["A"], aux["deg"], aux["rho"]
+        nbr_sum = jnp.einsum("ij,jpd->ipd", A, x)
+        rhs = aux["rhs0"] + rho * (deg[:, None, None] * x + nbr_sum) - alpha
+        x_new = jnp.linalg.solve(aux["Hs"], rhs)
+        nbr_sum_new = jnp.einsum("ij,jpd->ipd", A, x_new)
+        alpha = alpha + rho * (deg[:, None, None] * x_new - nbr_sum_new)
+        state = dict(x=x_new, alpha=alpha)
+        return state, self.metrics(x_new, x_new.mean(0), aux)
+
+
+class DGD(_GossipKernel):
+    """Decentralized gradient descent [6] with Metropolis mixing."""
+
+    name = "DGD"
+
+    def config(self, case):
+        return (case.alpha, True)
+
+    def prepare(self, problem, net: Network, cfg, iters: int):
+        alpha0, diminishing = cfg
+        steps = (
+            alpha0 / np.sqrt(np.arange(1, iters + 1))
+            if diminishing
+            else np.full(iters, alpha0)
+        )
+        return Prepared(
+            consts=_lsq_consts(problem, metropolis_weights(net)),
+            steps=(steps.astype(problem.O.dtype),),
+            statics=dict(name=self.name, iters=iters),
+            max_statics={},
+            comm=np.cumsum(np.full(iters, 2.0 * net.E)),
+            sim_time=np.zeros(iters),
+        )
+
+    def setup(self, consts, statics):
+        O, T, W, x_star, O_test, T_test = consts
+        aux = self.lsq_aux(O, T, x_star, O_test, T_test)
+        aux["W"] = W
+        return aux
+
+    def init(self, aux, statics):
+        return dict(x=jnp.zeros(aux["shape"], aux["dtype"]))
+
+    def step(self, state, inp, aux, statics):
+        (alpha,) = inp
+        x = state["x"]
+        x_new = jnp.einsum("ij,jpd->ipd", aux["W"], x) - alpha * self._grad(
+            aux, x
+        )
+        return dict(x=x_new), self.metrics(x_new, x_new.mean(0), aux)
+
+
+class EXTRA(_GossipKernel):
+    """EXTRA [7]: exact first-order gossip with constant step size."""
+
+    name = "EXTRA"
+
+    def config(self, case) -> float:
+        return case.alpha
+
+    def prepare(self, problem, net: Network, alpha: float, iters: int):
+        return Prepared(
+            consts=_lsq_consts(problem, metropolis_weights(net), alpha),
+            steps=(),
+            statics=dict(name=self.name, iters=iters),
+            max_statics={},
+            comm=np.cumsum(np.full(iters, 2.0 * net.E)),
+            sim_time=np.zeros(iters),
+        )
+
+    def setup(self, consts, statics):
+        O, T, W, x_star, O_test, T_test, alpha = consts
+        aux = self.lsq_aux(O, T, x_star, O_test, T_test)
+        N = O.shape[0]
+        eye = jnp.eye(N, dtype=O.dtype)
+        aux.update(W=W, alpha=alpha, I_plus_W=eye + W, W_tilde=0.5 * (eye + W))
+        return aux
+
+    def init(self, aux, statics):
+        x0 = jnp.zeros(aux["shape"], aux["dtype"])
+        x1 = jnp.einsum("ij,jpd->ipd", aux["W"], x0) - aux[
+            "alpha"
+        ] * self._grad(aux, x0)
+        return dict(x_prev=x0, x=x1)
+
+    def step(self, state, inp, aux, statics):
+        x_prev, x_cur = state["x_prev"], state["x"]
+        x_next = (
+            jnp.einsum("ij,jpd->ipd", aux["I_plus_W"], x_cur)
+            - jnp.einsum("ij,jpd->ipd", aux["W_tilde"], x_prev)
+            - aux["alpha"] * (self._grad(aux, x_cur) - self._grad(aux, x_prev))
+        )
+        state = dict(x_prev=x_cur, x=x_next)
+        return state, self.metrics(x_next, x_next.mean(0), aux)
+
+
+D_ADMM_K = register(DADMM())
+DGD_K = register(DGD())
+EXTRA_K = register(EXTRA())

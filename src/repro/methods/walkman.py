@@ -1,0 +1,105 @@
+"""W-ADMM (Walkman [3]) as a MethodKernel — random-walk incremental ADMM.
+
+Same incremental proximal-linearized updates as sI-ADMM, but the token
+performs a uniform random walk over neighbors (one agent + one link per
+iteration) and the stochastic gradient is a plain contiguous mini-batch
+(no ECN partitioning / coding).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admm import ADMMConfig
+from repro.core.graph import Network
+from repro.core.problems import LeastSquaresProblem
+
+from .base import MethodKernel, Prepared, register
+
+__all__ = ["WalkmanADMM", "W_ADMM"]
+
+
+class WalkmanADMM(MethodKernel):
+    name = "W-ADMM"
+
+    def config(self, case) -> ADMMConfig:
+        return case.admm_config()
+
+    def static_signature(
+        self, problem: LeastSquaresProblem, cfg: ADMMConfig, iters: int
+    ) -> tuple:
+        return (
+            self.name, cfg.M,
+            problem.N, problem.b, problem.p, problem.d,
+            problem.O_test.shape[0], iters,
+        )
+
+    def prepare(
+        self,
+        problem: LeastSquaresProblem,
+        net: Network,
+        cfg: ADMMConfig,
+        iters: int,
+    ) -> Prepared:
+        N, b = problem.N, problem.b
+        rng = np.random.default_rng(cfg.seed)
+        agents = np.zeros(iters, dtype=np.int32)
+        cur = int(rng.integers(N))
+        for k in range(iters):
+            agents[k] = cur
+            cur = int(rng.choice(net.neighbors(cur)))
+        nb = max(b // cfg.M, 1)
+        offsets = ((np.arange(iters) // N % nb) * cfg.M).astype(np.int32)
+        tau = cfg.c_tau * np.sqrt(np.arange(1, iters + 1))
+        gamma = cfg.c_gamma / np.sqrt(np.arange(1, iters + 1))
+        dt = problem.O.dtype
+        return Prepared(
+            consts=(
+                problem.O,
+                problem.T,
+                problem.x_star().astype(dt),
+                problem.O_test,
+                problem.T_test,
+                np.asarray(cfg.rho, dtype=dt),
+            ),
+            steps=(agents, offsets, tau.astype(dt), gamma.astype(dt)),
+            statics=dict(name=self.name, iters=iters, M=cfg.M, N=N),
+            max_statics={},
+            comm=np.cumsum(np.ones(iters)),  # one link per walk step
+            sim_time=np.zeros(iters),
+        )
+
+    def setup(self, consts, statics):
+        O, T, x_star, O_test, T_test, rho = consts
+        aux = self.lsq_aux(O, T, x_star, O_test, T_test)
+        aux["rho"] = rho
+        return aux
+
+    def init(self, aux, statics):
+        return self.xyz_state(aux)
+
+    def step(self, state, inp, aux, statics):
+        i, off, tk, gk = inp
+        x, y, z = state["x"], state["y"], state["z"]
+        rho, M, N = aux["rho"], statics["M"], statics["N"]
+        p, d = aux["shape"][1], aux["shape"][2]
+        zero = jnp.zeros((), off.dtype)
+        Ob = jax.lax.dynamic_slice(aux["O"][i], (off, zero), (M, p))
+        Tb = jax.lax.dynamic_slice(aux["T"][i], (off, zero), (M, d))
+        xi, yi = x[i], y[i]
+        G = Ob.T @ (Ob @ xi - Tb) / M
+        x_new = (tk * xi + rho * z + yi - G) / (rho + tk)
+        y_new = yi + rho * gk * (z - x_new)
+        z_new = z + ((x_new - xi) - (y_new - yi) / rho) / N
+        state = dict(
+            x=x.at[i].set(x_new), y=y.at[i].set(y_new), z=z_new
+        )
+        return state, self.metrics(state["x"], z_new, aux)
+
+    def final(self, state, aux, statics):
+        return state["x"], state["z"]
+
+
+W_ADMM = register(WalkmanADMM())

@@ -146,22 +146,30 @@ def test_mean_reduction_matches_numpy():
     np.testing.assert_allclose(ci, 0.0)
 
 
-def test_mixed_statics_rejected_by_core_batch():
-    from repro.core.admm import run_incremental_admm_batch
+def test_mixed_statics_rejected_by_batch_driver():
+    from repro.methods import get_kernel, run_batch
+    from repro.methods.admm import ADMMRun
 
+    kernel = get_kernel("sI-ADMM")
     nets = [make_network(5, 0.5, seed=s) for s in (0, 1)]
     probs = [allocate(DATASETS["usps"](s), 5, k) for s, k in ((0, 3), (1, 6))]
-    cfgs = [ADMMConfig(M=12, K=3, seed=0), ADMMConfig(M=12, K=6, seed=1)]
+    cfgs = [
+        ADMMRun(ADMMConfig(M=12, K=3, seed=0)),
+        ADMMRun(ADMMConfig(M=12, K=6, seed=1)),
+    ]
     with pytest.raises(ValueError, match="static signatures"):
-        run_incremental_admm_batch(probs, nets, cfgs, 10)
+        run_batch(kernel, probs, nets, cfgs, 10)
 
     # ...but mixed mini-batch sizes M (hence mixed mu) batch fine: mu is a
-    # runtime input of the masked batched scan, not a jit static.
+    # runtime input of the masked kernel step, not a jit static.
     probs = [allocate(DATASETS["usps"](s), 5, 3) for s in (0, 1)]
-    cfgs = [ADMMConfig(M=12, K=3, seed=0), ADMMConfig(M=24, K=3, seed=1)]
-    traces = run_incremental_admm_batch(probs, nets, cfgs, 20)
-    for prob, net, cfg, tr in zip(probs, nets, cfgs, traces):
-        ref = run_incremental_admm(prob, net, cfg, 20)
+    cfgs = [
+        ADMMRun(ADMMConfig(M=12, K=3, seed=0)),
+        ADMMRun(ADMMConfig(M=24, K=3, seed=1)),
+    ]
+    traces = run_batch(kernel, probs, nets, cfgs, 20)
+    for prob, net, run, tr in zip(probs, nets, cfgs, traces):
+        ref = run_incremental_admm(prob, net, run.cfg, 20)
         np.testing.assert_allclose(
             tr.accuracy, ref.accuracy, rtol=1e-5, atol=1e-5
         )
@@ -175,8 +183,45 @@ def test_registry_sweeps_resolve():
         cases = spec.cases()
         assert cases, name
         for c in cases:
-            if c.method in ("sI-ADMM", "csI-ADMM", "I-ADMM"):
+            if c.method in (
+                "sI-ADMM", "csI-ADMM", "I-ADMM", "pI-ADMM", "cq-sI-ADMM"
+            ):
                 c.admm_config().validate()
 
     with pytest.raises(KeyError):
         get_sweep("nonexistent")
+
+
+# Pinned grid shape of every named sweep at (iters=8, runs=1):
+# (n_cases, n_static_groups). Registry edits that change how many traces a
+# sweep compiles or how many runs it dispatches must update this table —
+# trace counts can't silently explode.
+EXPECTED_GRIDS = {
+    "fig3_minibatch": (4, 1),  # M is runtime (masked mu): one trace
+    "fig3_baselines": (5, 5),  # one method = one kernel = one trace
+    "fig3_stragglers": (9, 2),  # K=4 fractional splits off (b, K differ)
+    "fig4_baselines": (5, 5),
+    "fig4_stragglers": (2, 1),  # S/scheme are runtime: one trace
+    "fig5": (4, 1),  # the tentpole: whole S sweep shares one trace
+    "topology_grid": (15, 1),  # S=0 scheme points merge; eta is runtime
+    "privacy_grid": (8, 1),  # sigma and S are runtime: one trace
+    "compression_grid": (9, 3),  # one trace per compressor static
+}
+
+
+def test_registry_sweep_counts():
+    """Smoke-materialize every named sweep; pin case and group counts."""
+    from repro.experiments import SWEEPS
+    from repro.experiments.sweep import _materialize
+
+    assert set(EXPECTED_GRIDS) == set(SWEEPS)
+    for name, (n_cases, n_groups) in EXPECTED_GRIDS.items():
+        spec = get_sweep(name, iters=8, runs=1)
+        cases = spec.cases()
+        net_cache, prob_cache = {}, {}
+        sigs = {
+            _signature(c, _materialize(c, net_cache, prob_cache)[1])
+            for c in cases
+        }
+        assert len(cases) == n_cases, f"{name}: {len(cases)} cases"
+        assert len(sigs) == n_groups, f"{name}: {len(sigs)} static groups"
