@@ -1,6 +1,12 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test test-slow bench bench-smoke docs-check
+# Sweeps timed by the benchmark-in-CI gate (BENCH_ci.json vs
+# benchmarks/baseline.json); keep in sync with benchmarks/baseline.json.
+BENCH_SWEEPS := fig5,mesh_scale
+BENCH_JSON := BENCH_ci.json
+
+.PHONY: test test-slow bench bench-smoke bench-json bench-baseline \
+	lint docs-check
 
 # Tier-1 verification: the whole suite, stop on first failure.
 test:
@@ -19,6 +25,25 @@ bench:
 bench-smoke:
 	$(PY) -m benchmarks.run --sweep fig5 --iters 120 --runs 2
 	$(PY) -m benchmarks.run --only kernels
+
+# Benchmark-in-CI pipeline (DESIGN.md §9): time the gated sweeps, write
+# the machine-readable summary, fail on >1.5x wall-clock regression or
+# any dispatch-count growth vs the committed baseline. CI and the local
+# workflow invoke exactly this target.
+bench-json:
+	$(PY) -m benchmarks.run --sweep $(BENCH_SWEEPS) --iters 120 --runs 2 \
+		--json $(BENCH_JSON)
+	$(PY) -m benchmarks.check $(BENCH_JSON)
+
+# Refresh the committed baseline after a deliberate perf change.
+bench-baseline:
+	$(PY) -m benchmarks.run --sweep $(BENCH_SWEEPS) --iters 120 --runs 2 \
+		--json $(BENCH_JSON)
+	$(PY) -m benchmarks.check $(BENCH_JSON) --update
+
+# Ruff lint (config in pyproject.toml) — same command CI runs.
+lint:
+	ruff check src benchmarks tests tools
 
 # Every DESIGN.md / EXPERIMENTS.md section cited from src/ and
 # benchmarks/ must exist (tools/docs_check.py).

@@ -1,0 +1,123 @@
+"""Benchmark regression gate for the CI pipeline (DESIGN.md §9).
+
+Compares a fresh ``BENCH_*.json`` (written by ``benchmarks.run --json``)
+against the committed ``benchmarks/baseline.json``:
+
+- a sweep's wall-clock may not exceed ``threshold`` x its baseline
+  (default 1.5x — generous enough for runner jitter, tight enough to
+  catch a lost vmap or a trace-per-case explosion);
+- a sweep's dispatch count may not exceed its baseline at all (dispatch
+  counts are deterministic grid properties, so ANY growth is a batching
+  regression, not noise);
+- every baseline sweep must appear in the fresh file — dropping one from
+  the Makefile's BENCH_SWEEPS would otherwise silently disable its
+  coverage. Remove a sweep deliberately by refreshing the baseline.
+
+Sweeps present only in the FRESH file are reported as NEW and pass, so
+adding a sweep to the registry does not require touching the baseline in
+the same commit. Refresh the baseline with ``--update`` after a
+deliberate change; the recorded wall_s values are the measurement times
+``--headroom`` (default 2.5x), absorbing the dev-box-vs-CI-runner speed
+gap so the 1.5x gate doesn't flake on slower hardware:
+
+  PYTHONPATH=src python -m benchmarks.run --sweep fig5 --iters 120 \
+      --runs 2 --json BENCH_ci.json
+  PYTHONPATH=src python -m benchmarks.check BENCH_ci.json
+  PYTHONPATH=src python -m benchmarks.check BENCH_ci.json --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+
+def load(path) -> dict:
+    with open(path) as fh:
+        data = json.load(fh)
+    if "sweeps" not in data:
+        raise SystemExit(f"{path}: not a benchmarks.run --json file")
+    return data
+
+
+def compare(current: dict, baseline: dict, threshold: float) -> int:
+    """Print the comparison table; return the number of regressions."""
+    cur, base = current["sweeps"], baseline["sweeps"]
+    failures = 0
+    print(f"{'sweep':24s} {'base_s':>8s} {'now_s':>8s} {'ratio':>6s} "
+          f"{'disp':>9s}  verdict")
+    for name in sorted(set(cur) | set(base)):
+        if name not in base:
+            print(f"{name:24s} {'-':>8s} {cur[name]['wall_s']:8.2f} "
+                  f"{'-':>6s} {'-':>9s}  NEW (no baseline)")
+            continue
+        if name not in cur:
+            print(f"{name:24s} {base[name]['wall_s']:8.2f} {'-':>8s} "
+                  f"{'-':>6s} {'-':>9s}  FAIL not run (coverage dropped)")
+            failures += 1
+            continue
+        b, c = base[name], cur[name]
+        ratio = c["wall_s"] / max(b["wall_s"], 1e-9)
+        disp = f"{b['dispatches']}->{c['dispatches']}"
+        bad_time = ratio > threshold
+        bad_disp = c["dispatches"] > b["dispatches"]
+        verdict = "ok"
+        if bad_time:
+            verdict = f"FAIL wall-clock > {threshold:.2f}x baseline"
+        if bad_disp:
+            verdict = "FAIL dispatch count grew (batching regression)"
+        failures += bad_time + bad_disp
+        print(f"{name:24s} {b['wall_s']:8.2f} {c['wall_s']:8.2f} "
+              f"{ratio:6.2f} {disp:>9s}  {verdict}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", help="BENCH_*.json produced by "
+                    "benchmarks.run --json")
+    ap.add_argument("--baseline", default=str(BASELINE),
+                    help=f"committed baseline (default {BASELINE})")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed wall-clock ratio (default 1.5)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the BENCH file "
+                    "(wall_s x headroom) instead of checking")
+    ap.add_argument("--headroom", type=float, default=2.5,
+                    help="--update: factor applied to measured wall_s "
+                    "to absorb dev-box-vs-CI-runner speed (default 2.5)")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        data = load(args.bench)
+        for s in data["sweeps"].values():
+            s["wall_s"] = round(s["wall_s"] * args.headroom, 3)
+        data["note"] = (
+            f"wall_s = measured x {args.headroom} headroom "
+            "(benchmarks.check --update); the 1.5x threshold applies on "
+            "top. dispatches/runs are exact grid properties: any "
+            "dispatch growth fails the gate regardless of hardware."
+        )
+        with open(args.baseline, "w") as fh:
+            json.dump(data, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline updated from {args.bench} "
+              f"(x{args.headroom} headroom)")
+        return 0
+
+    current = load(args.bench)
+    baseline = load(args.baseline)
+    failures = compare(current, baseline, args.threshold)
+    if failures:
+        print(f"benchmarks.check: {failures} regression(s)")
+        return 1
+    print("benchmarks.check: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,14 +4,12 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Iterable, List, Tuple
+from typing import Callable, List, Tuple
 
 import numpy as np
 
-from repro.core.admm import ADMMConfig, run_incremental_admm
 from repro.core.graph import make_network
 from repro.core.problems import DATASETS, allocate
-from repro.core.straggler import StragglerModel
 
 # Experiment scale (paper uses a laptop too; these sizes keep each figure
 # benchmark under ~a minute on 1 CPU core while preserving every comparison).

@@ -6,7 +6,6 @@ uint16 view (npz has no bf16 dtype) recorded in a sidecar '__bf16__' list.
 
 from __future__ import annotations
 
-import io
 import os
 import re
 import tempfile

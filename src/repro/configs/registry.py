@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.models import ModelConfig, get_model
 
-from .shapes import SHAPES, InputShape
+from .shapes import InputShape
+from .shapes import SHAPES as SHAPES  # re-exported via repro.configs
 
 VIS_PREFIX = 256  # stub vision tokens prepended for VLM configs
 

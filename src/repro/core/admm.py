@@ -100,7 +100,6 @@ def make_schedule(
     Returns dict of numpy arrays consumed by the jitted scan + the
     time/communication accounting.
     """
-    rng = np.random.default_rng(cfg.seed)
     K, S = cfg.K, cfg.S
     P = b // K  # partition size per ECN slot
     mu = cfg.M_bar // K  # per-partition sub-batch size

@@ -22,7 +22,7 @@ partitions) with the paper's cyclic batch index I_{i,j}^k = m mod floor(...).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -12,7 +12,7 @@ least-squares path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List
+from typing import Dict, List
 
 import numpy as np
 

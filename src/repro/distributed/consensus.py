@@ -39,8 +39,7 @@ Modes:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.coding import GradientCode, make_code
 
-from .sharding import AxisLayout, auto_spec, tree_specs
+from .sharding import AxisLayout, tree_specs
 
 __all__ = ["ConsensusConfig", "ConsensusRuntime"]
 

@@ -9,10 +9,9 @@ same sharding rules.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.optim import adam_init, adam_update, clip_by_global_norm

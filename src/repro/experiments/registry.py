@@ -216,6 +216,31 @@ def compression_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
     )
 
 
+def mesh_scale(iters: int = 600, runs: int = 16) -> SweepSpec:
+    """Beyond-paper: the fig5 grid at mesh scale (64 runs default).
+
+    Built to saturate a multi-device mesh: S x scheme x 16 seeds is one
+    static group, so the whole grid is ONE sharded dispatch whose runs
+    axis splits evenly over 1/2/4/8 devices (DESIGN.md §9). The
+    benchmark-in-CI pipeline times it via ``benchmarks.run --sweep
+    mesh_scale --json`` at smoke scale.
+    """
+    return SweepSpec(
+        "mesh_scale",
+        Case(
+            method="csI-ADMM", dataset="synthetic", K=6, M=360,
+            scheme="cyclic", c_tau=0.5, iters=iters,
+        ),
+        axes={
+            "S": [0, 1],
+            "scheme": ["cyclic", "fractional"],
+            "seed": list(range(runs)),
+        },
+        fixup=_coded_scheme,
+        description="fig5-style grid sized for mesh-sharded execution",
+    )
+
+
 SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig3_minibatch": fig3_minibatch,
     "fig3_baselines": fig3_baselines,
@@ -226,6 +251,7 @@ SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "topology_grid": topology_grid,
     "privacy_grid": privacy_grid,
     "compression_grid": compression_grid,
+    "mesh_scale": mesh_scale,
 }
 
 

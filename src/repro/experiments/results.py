@@ -10,7 +10,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .sweep import Case, SweepResult
+from .sweep import SweepResult
 
 __all__ = ["stack_field", "mean_ci", "reduce_mean", "emit_rows"]
 

@@ -7,9 +7,12 @@ the grid by jit *static signature* (everything that would force a fresh
 trace: shapes, K, P, exact_x, iters, method kernel — see
 `MethodKernel.static_signature`, DESIGN.md §8) and executes each group
 as one `jax.vmap`-ed `lax.scan` — one compile and one device dispatch per
-group, however many (seed, config) pairs it contains. Host-side sampling
-(topology, data allocation, straggler times, decode vectors) stays
-per-run and is stacked into the batched scan's per-step inputs.
+group, however many (seed, config) pairs it contains. With more than one
+visible device the vmapped runs axis is additionally laid out over a
+1-D mesh (`repro.methods.driver.run_sharded`, DESIGN.md §9); the tier is
+picked by ``mode`` ("auto"/"serial"/"batched"/"sharded"). Host-side
+sampling (topology, data allocation, straggler times, decode vectors)
+stays per-run and is stacked into the batched scan's per-step inputs.
 
 Timing of the serial-vs-batched paths is recorded in EXPERIMENTS.md §Perf.
 """
@@ -23,13 +26,20 @@ import time
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 from repro.core.admm import ADMMConfig, Trace
 from repro.core.graph import Network, make_network
 from repro.core.problems import DATASETS, LeastSquaresProblem, allocate
 from repro.core.straggler import StragglerModel
-from repro.methods import KERNELS, get_kernel, run_batch, run_serial
+from repro.methods import (
+    KERNELS,
+    get_kernel,
+    run_batch,
+    run_serial,
+    run_sharded,
+)
+
+MODES = ("auto", "serial", "batched", "sharded")
 
 __all__ = ["Case", "SweepSpec", "SweepResult", "run_sweep"]
 
@@ -162,12 +172,14 @@ class SweepSpec:
 
 @dataclasses.dataclass
 class SweepResult:
-    """Per-case traces + how the grid was batched onto the device."""
+    """Per-case traces + how the grid was batched onto the device(s)."""
 
     cases: List[Case]
     traces: List[Trace]
     groups: List[Tuple[tuple, int]]  # (static signature, n_runs) per group
     wall_s: float
+    mode: str = "batched"  # resolved execution tier (DESIGN.md §9)
+    n_devices: int = 1
 
     @property
     def n_dispatches(self) -> int:
@@ -231,22 +243,46 @@ def _dispatch_group(
     cases: List[Case],
     nets: List[Network],
     probs: List[LeastSquaresProblem],
-    serial: bool,
+    mode: str,
 ) -> List[Trace]:
-    """Registry lookup + the derived serial/batched driver (DESIGN.md §8)."""
+    """Registry lookup + the derived execution backend (DESIGN.md §8, §9)."""
     kernel = get_kernel(method)
     iters = cases[0].iters
     cfgs = [kernel.config(c) for c in cases]
-    if serial:
+    if mode == "serial":
         return [
             run_serial(kernel, p, n, cf, iters)
             for p, n, cf in zip(probs, nets, cfgs)
         ]
+    if mode == "sharded":
+        return run_sharded(kernel, probs, nets, cfgs, iters)
     return run_batch(kernel, probs, nets, cfgs, iters)
 
 
+def _resolve_mode(serial: bool, mode: Optional[str]) -> str:
+    """Execution-tier resolution (DESIGN.md §9): explicit ``mode`` wins,
+    the legacy ``serial`` flag maps onto it, REPRO_SWEEP_MODE sets the
+    process default, and ``auto`` picks sharded iff >1 device is visible.
+    """
+    if mode is None:
+        mode = "serial" if serial else os.environ.get(
+            "REPRO_SWEEP_MODE", "auto"
+        )
+    elif serial and mode != "serial":
+        raise ValueError(f"serial=True contradicts mode={mode!r}")
+    if mode not in MODES:
+        raise ValueError(f"unknown sweep mode {mode!r}; known: {MODES}")
+    if mode == "auto":
+        mode = "sharded" if len(jax.devices()) > 1 else "batched"
+    return mode
+
+
 def run_sweep(
-    spec_or_cases, *, serial: bool = False, verbose: bool = False
+    spec_or_cases,
+    *,
+    serial: bool = False,
+    mode: Optional[str] = None,
+    verbose: bool = False,
 ) -> SweepResult:
     """Execute a sweep: one vmapped dispatch per static-signature group.
 
@@ -255,6 +291,10 @@ def run_sweep(
       serial: run each case through the per-run (seed) entry points instead
         of the batched ones — the reference path for correctness tests and
         the "before" column of the EXPERIMENTS.md §Perf timing table.
+      mode: execution tier — "serial", "batched" (single-device vmap),
+        "sharded" (the same vmap laid out over a device mesh on the runs
+        axis, DESIGN.md §9), or "auto" (sharded iff >1 device is visible;
+        the default, overridable via REPRO_SWEEP_MODE).
       verbose: print one line per dispatched group.
 
     Returns a `SweepResult` with traces in the original grid order.
@@ -266,6 +306,7 @@ def run_sweep(
     )
     if not cases:
         raise ValueError("empty sweep")
+    mode = _resolve_mode(serial, mode)
     _enable_compilation_cache()
 
     t0 = time.perf_counter()
@@ -286,11 +327,10 @@ def run_sweep(
         gprobs = [mats[i][1] for i in idxs]
         if verbose:
             print(
-                f"[sweep] {sig[0]} group x{len(idxs)} "
-                f"({'serial' if serial else 'vmapped'}): {sig[1:]}"
+                f"[sweep] {sig[0]} group x{len(idxs)} ({mode}): {sig[1:]}"
             )
         gtraces = _dispatch_group(
-            gcases[0].method, gcases, gnets, gprobs, serial
+            gcases[0].method, gcases, gnets, gprobs, mode
         )
         for i, tr in zip(idxs, gtraces):
             traces[i] = tr
@@ -301,4 +341,6 @@ def run_sweep(
         traces=traces,  # type: ignore[arg-type]
         groups=group_meta,
         wall_s=time.perf_counter() - t0,
+        mode=mode,
+        n_devices=len(jax.devices()),
     )

@@ -15,8 +15,6 @@ tile is a multiple of 128 lanes.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -26,10 +24,18 @@ __all__ = ["coded_combine_kernel", "coded_admm_update_kernel"]
 DEFAULT_BLOCK_N = 16_384
 
 
+def _compute_dtype(dtype) -> jnp.dtype:
+    """Accumulate in >= float32: bf16 promotes to f32 (TPU MXU/VPU native),
+    f64 stays f64 so the x64 convergence suite keeps full precision when
+    the kernel runs in interpret mode on CPU."""
+    return jnp.promote_types(dtype, jnp.float32)
+
+
 def _combine_body(msgs_ref, coeffs_ref, out_ref):
-    m = msgs_ref[...].astype(jnp.float32)  # (J, bn)
-    c = coeffs_ref[...].astype(jnp.float32)  # (J, 1)
-    out_ref[...] = jnp.sum(m * c, axis=0, keepdims=True)
+    ct = _compute_dtype(msgs_ref.dtype)
+    m = msgs_ref[...].astype(ct)  # (J, bn)
+    c = coeffs_ref[...].astype(ct)  # (J, 1)
+    out_ref[...] = jnp.sum(m * c, axis=0, keepdims=True).astype(out_ref.dtype)
 
 
 def coded_combine_kernel(
@@ -39,7 +45,7 @@ def coded_combine_kernel(
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
 ) -> jax.Array:
-    """out (n,) f32 = sum_j coeffs[j] * msgs[j]."""
+    """out (n,) = sum_j coeffs[j] * msgs[j], accumulated in >= f32."""
     J, n = msgs.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
@@ -51,7 +57,7 @@ def coded_combine_kernel(
             pl.BlockSpec((J, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((1, n), _compute_dtype(msgs.dtype)),
         interpret=interpret,
         name="coded_combine",
     )(msgs, coeffs.reshape(J, 1))
@@ -59,15 +65,16 @@ def coded_combine_kernel(
 
 
 def _admm_body(msgs_ref, coeffs_ref, x_ref, y_ref, z_ref, scal_ref, out_ref):
-    m = msgs_ref[...].astype(jnp.float32)  # (J, bn)
-    c = coeffs_ref[...].astype(jnp.float32)  # (J, 1)
+    ct = _compute_dtype(x_ref.dtype)
+    m = msgs_ref[...].astype(ct)  # (J, bn)
+    c = coeffs_ref[...].astype(ct)  # (J, 1)
     G = jnp.sum(m * c, axis=0, keepdims=True)  # (1, bn)
-    tau = scal_ref[0, 0]
-    rho = scal_ref[0, 1]
+    tau = scal_ref[0, 0].astype(ct)
+    rho = scal_ref[0, 1].astype(ct)
     num = (
-        tau * x_ref[...].astype(jnp.float32)
-        + rho * z_ref[...].astype(jnp.float32)
-        + y_ref[...].astype(jnp.float32)
+        tau * x_ref[...].astype(ct)
+        + rho * z_ref[...].astype(ct)
+        + y_ref[...].astype(ct)
         - G
     )
     out_ref[...] = (num / (rho + tau)).astype(out_ref.dtype)
@@ -85,12 +92,17 @@ def coded_admm_update_kernel(
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused decode + eq. (5a): x+ = (tau x + rho z + y - a.msgs)/(rho+tau)."""
+    """Fused decode + eq. (5a): x+ = (tau x + rho z + y - a.msgs)/(rho+tau).
+
+    ``tau`` and ``rho`` may be traced scalars (the method step passes the
+    per-iteration schedule value); both ride in via the (1, 2) scal tile.
+    """
     J, n = msgs.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
+    st = _compute_dtype(x.dtype)
     scal = jnp.stack(
-        [jnp.asarray(tau, jnp.float32), jnp.asarray(rho, jnp.float32)]
+        [jnp.asarray(tau, st), jnp.asarray(rho, st)]
     ).reshape(1, 2)
     row = pl.BlockSpec((1, block_n), lambda i: (0, i))
     out = pl.pallas_call(

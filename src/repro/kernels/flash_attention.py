@@ -113,7 +113,9 @@ def flash_attention_kernel(
     assert Sq % block_q == 0 and Skv % block_kv == 0, (Sq, Skv, block_q, block_kv)
     nq, nk = Sq // block_q, Skv // block_kv
     grid = (B, H, nq, nk)
-    kv_of = lambda h: h * KV // H
+
+    def kv_of(h):
+        return h * KV // H
 
     body = functools.partial(
         _body,

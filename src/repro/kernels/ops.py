@@ -22,6 +22,7 @@ from .ssd_scan import ssd_scan_kernel
 __all__ = [
     "coded_combine",
     "coded_admm_update",
+    "fit_block_n",
     "flash_attention",
     "ssd_scan",
     "rglru_scan",
@@ -34,6 +35,18 @@ def _interpret() -> bool:
 
 def _pad_to(n: int, mult: int) -> int:
     return (n + mult - 1) // mult * mult
+
+
+def fit_block_n(n: int, block_n: int = 4096, lane: int = 128) -> int:
+    """Largest lane-legal tile <= block_n that avoids gross over-padding.
+
+    The method-kernel step calls the fused ADMM update on flat (p*d,)
+    vectors that can be much smaller than the default HBM tile; padding a
+    640-float vector to 4096 would 6x the per-step work. Tiles stay
+    multiples of the 128-lane vector width (pallas_guide 'Tiling
+    Constraints').
+    """
+    return min(block_n, _pad_to(max(n, 1), lane))
 
 
 # --------------------------------------------------------------------------
@@ -54,7 +67,7 @@ def coded_combine(
     return out[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "block_n"))
+@functools.partial(jax.jit, static_argnames=("block_n",))
 def coded_admm_update(
     msgs: jax.Array,
     coeffs: jax.Array,
@@ -62,11 +75,15 @@ def coded_admm_update(
     y: jax.Array,
     z: jax.Array,
     tau: jax.Array,
-    rho: float,
+    rho: jax.Array,
     *,
     block_n: int = 4096,
 ) -> jax.Array:
-    """Fused decode + eq. (5a) x-update over flat parameter vectors."""
+    """Fused decode + eq. (5a) x-update over flat parameter vectors.
+
+    ``rho``/``tau`` are runtime scalars (python floats or traced arrays):
+    the method-kernel scan feeds per-iteration schedule values, so neither
+    may force a re-trace."""
     J, n = msgs.shape
     n_pad = _pad_to(n, block_n)
     if n_pad != n:
@@ -176,7 +193,6 @@ def rglru_scan(
     bs = block_s
     while S % bs:
         bs //= 2
-    S_pad = S  # bs always divides S after the loop (bs reaches 1 worst case)
     h, hlast = rglru_scan_kernel(
         a, b, block_s=bs, block_w=block_w, interpret=_interpret()
     )

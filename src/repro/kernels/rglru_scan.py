@@ -17,7 +17,7 @@ bandwidth-bound scan (2 reads + 1 write per element).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

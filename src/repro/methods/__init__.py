@@ -3,9 +3,10 @@
 Each consensus optimization method is a `MethodKernel` — host-side
 ``prepare`` plus pure ``setup``/``init``/``step``/``final`` — and every
 execution backend is derived from it by `repro.methods.driver`:
-``run_serial`` (one jitted ``lax.scan`` per run) and ``run_batch``
-(``vmap`` of the same scan over a leading runs axis). Importing this
-package populates the `KERNELS` registry:
+``run_serial`` (one jitted ``lax.scan`` per run), ``run_batch`` (``vmap``
+of the same scan over a leading runs axis), and ``run_sharded`` (the
+same vmapped scan laid out over a device mesh on the runs axis,
+DESIGN.md §9). Importing this package populates the `KERNELS` registry:
 
   sI-ADMM / csI-ADMM / I-ADMM  (paper Algorithms 1 & 2, eq. 4)
   W-ADMM, D-ADMM, DGD, EXTRA   (paper §V-A baselines)
@@ -16,7 +17,7 @@ package populates the `KERNELS` registry:
 from .admm import ADMMRun, IncrementalADMM
 from .base import KERNELS, MethodKernel, Prepared, get_kernel, register
 from .compression import CompressionRun
-from .driver import run_batch, run_serial
+from .driver import run_batch, run_serial, run_sharded
 from .gossip import DADMM, DGD, EXTRA
 from .privacy import PrivacyRun
 from .walkman import WalkmanADMM
@@ -29,6 +30,7 @@ __all__ = [
     "get_kernel",
     "run_serial",
     "run_batch",
+    "run_sharded",
     "ADMMRun",
     "PrivacyRun",
     "CompressionRun",

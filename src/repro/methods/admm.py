@@ -13,11 +13,15 @@ Per step (active agent i = i_k, eqs. 5a/5b/4c):
 
 with G_i the decoded mini-batch gradient (eq. 6). The coded
 encode->decode path collapses host-side to per-partition weights
-w = (a^T B)/K, so the device step is one row-weighted gradient; the
-sub-batch size mu = M/((S+1)K) is a *runtime* input masked against the
-static bound MU, which is what lets a whole straggler-tolerance sweep
-share one jit trace (DESIGN.md §7). I-ADMM (exact_x) replaces the
-stochastic x-update with the closed-form full-batch solve (eq. 4a).
+w = (a^T B)/K; the device step computes one masked sub-batch gradient
+message per ECN partition and hands decode-combine + eq. (5a) to the
+fused Pallas kernel `repro.kernels.ops.coded_admm_update` (interpret
+mode off-TPU), so serial, batched, and mesh-sharded execution all
+exercise the same fused hot path (DESIGN.md §5, §9). The sub-batch
+size mu = M/((S+1)K) is a *runtime* input masked against the static
+bound MU, which is what lets a whole straggler-tolerance sweep share
+one jit trace (DESIGN.md §7). I-ADMM (exact_x) replaces the stochastic
+x-update with the closed-form full-batch solve (eq. 4a).
 
 Subclass hooks ``_perturb_x`` (pI-ADMM, `repro.methods.privacy`) and
 ``_token_update`` (cq-sI-ADMM, `repro.methods.compression`) extend the
@@ -29,7 +33,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -38,6 +41,7 @@ from repro.core.coding import GradientCode, make_code
 from repro.core.graph import Network
 from repro.core.problems import LeastSquaresProblem
 from repro.core.straggler import StragglerModel
+from repro.kernels.ops import coded_admm_update, fit_block_n
 
 from .base import MethodKernel, Prepared, register
 
@@ -170,6 +174,9 @@ class IncrementalADMM(MethodKernel):
             b=b,
             shape=(N, p, d),
             dtype=O.dtype,
+            # Static tile for the fused Pallas x-update (lane-legal, no
+            # gross padding of the flat (p*d,) parameter vector).
+            block_n=fit_block_n(p * d),
         )
         if statics["exact_x"]:
             # I-ADMM exact solve operands: (O^T O / b + rho I), O^T T / b.
@@ -201,14 +208,21 @@ class IncrementalADMM(MethodKernel):
                 + aux["part"][:, None] * statics["P"]
                 + off
                 + aux["rows"][None, :]
-            ).reshape(-1)
-            Ob = aux["O_flat"][idx]  # (K*MU, p)
-            Tb = aux["T_flat"][idx]  # (K*MU, d)
-            c = (
-                (w * aux["inv_mu"])[:, None] * aux["valid"][None, :]
-            ).reshape(-1, 1)
-            G = Ob.T @ (c * (Ob @ xi - Tb))  # decoded eq. (6) gradient
-            x_new = (tk * xi + rho * z + yi - G) / (rho + tk)  # eq. (5a)
+            )
+            Ob = aux["O_flat"][idx]  # (K, MU, p)
+            Tb = aux["T_flat"][idx]  # (K, MU, d)
+            # Per-ECN coded message: the masked sub-batch gradient g~_j
+            # (eq. 6 before decode), one row of the fused kernel's msgs.
+            r = (aux["valid"] * aux["inv_mu"])[None, :, None] * (Ob @ xi - Tb)
+            msgs = jnp.einsum("kmp,kmd->kpd", Ob, r).reshape(
+                statics["K"], -1
+            )
+            # Fused decode-combine + eq. (5a) through the Pallas hot path
+            # (DESIGN.md §5); w already folds a^T B / K, so coeffs = w.
+            x_new = coded_admm_update(
+                msgs, w, xi.ravel(), yi.ravel(), z.ravel(), tk, rho,
+                block_n=aux["block_n"],
+            ).reshape(xi.shape)
 
         x_new = self._perturb_x(x_new, inp, aux, statics)
         y_new = yi + rho * gk * (z - x_new)  # eq. (5b)

@@ -8,7 +8,10 @@ baselines (W-ADMM, D-ADMM, DGD, EXTRA), and the beyond-paper variants
 
 - serial:  ``lax.scan(step)`` over iterations, one run per dispatch;
 - batched: ``vmap`` of the *same* scan over a leading runs axis, one jit
-  trace and one device dispatch per static-signature group.
+  trace and one device dispatch per static-signature group;
+- sharded: ``shard_map`` of the batched scan over a 1-D device mesh on
+  the runs axis — each device executes its local runs, bitwise equal to
+  batched (DESIGN.md §9).
 
 The contract that makes this work is the host/device split of DESIGN.md
 §2: ``prepare`` samples everything random host-side (numpy) and returns

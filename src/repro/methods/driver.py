@@ -1,11 +1,17 @@
-"""Execution backends derived from a MethodKernel (DESIGN.md §8).
+"""Execution backends derived from a MethodKernel (DESIGN.md §8, §9).
 
 ``run_serial`` executes one run as ``lax.scan(kernel.step)``;
 ``run_batch`` executes R runs as ``vmap`` of the *same* composed scan —
 the batched engine is a pure performance transform of the serial path
-because both call literally the same step function. The third backend,
-the TPU mesh runtime (`repro.distributed.consensus`, DESIGN.md §3),
-shares the algorithmic core but owns its sharding-aware state layout.
+because both call literally the same step function. ``run_sharded`` lays
+the batched runs axis of that same vmapped scan out over a
+`jax.sharding.Mesh` of every visible device (``shard_map`` over a 1-D
+runs mesh, NamedSharding-placed inputs, buffer donation on accelerator
+backends, automatic chunking when a grid exceeds the per-device memory
+budget), falling back structurally to the single-device vmap when only
+one device is visible (DESIGN.md §9). A fourth backend, the TPU mesh runtime
+(`repro.distributed.consensus`, DESIGN.md §3), shares the algorithmic
+core but owns its sharding-aware state layout.
 
 Jitted executables are cached per (kernel, statics) pair, on top of the
 persistent XLA compilation cache enabled by `repro.experiments.sweep`.
@@ -13,20 +19,24 @@ persistent XLA compilation cache enabled by `repro.experiments.sweep`.
 
 from __future__ import annotations
 
+import os
 from functools import lru_cache
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.admm import Trace
 from repro.core.graph import Network
 from repro.core.problems import LeastSquaresProblem
+from repro.distributed.sharding import AxisLayout, batch_specs
 
 from .base import MethodKernel, Prepared
 
-__all__ = ["run_serial", "run_batch"]
+__all__ = ["run_serial", "run_batch", "run_sharded"]
 
 
 def _statics_key(statics: dict) -> tuple:
@@ -94,14 +104,14 @@ def run_serial(
     return _to_trace(prep, x, z, metrics)
 
 
-def run_batch(
+def _stack_batch(
     kernel: MethodKernel,
     problems: Sequence[LeastSquaresProblem],
     nets: Sequence[Network],
     cfgs: Sequence,
     iters: int,
-) -> List[Trace]:
-    """R runs as ONE vmapped scan — one jit trace, one device dispatch.
+) -> Tuple[List[Prepared], dict, Tuple[np.ndarray, ...], Tuple[np.ndarray, ...]]:
+    """Prepare R runs and stack them on a leading runs axis (host-side).
 
     All runs must share the kernel's static signature; ``max_statics``
     (e.g. the masked gather bound MU) are reconciled with ``max`` so runs
@@ -133,17 +143,197 @@ def run_batch(
         statics[key] = max(pr.max_statics[key] for pr in preps)
 
     consts = tuple(
-        jnp.asarray(np.stack([np.asarray(pr.consts[i]) for pr in preps]))
+        np.stack([np.asarray(pr.consts[i]) for pr in preps])
         for i in range(len(preps[0].consts))
     )
     steps = tuple(
-        jnp.asarray(np.stack([np.asarray(pr.steps[i]) for pr in preps]))
+        np.stack([np.asarray(pr.steps[i]) for pr in preps])
         for i in range(len(preps[0].steps))
     )
-    fn = _batch_fn(kernel, _statics_key(statics))
-    x, z, (acc, test_err, z_err) = fn(consts, steps)
+    return preps, statics, consts, steps
+
+
+def _unstack_traces(preps: List[Prepared], x, z, metrics) -> List[Trace]:
+    acc, test_err, z_err = metrics
     out = [np.asarray(o) for o in (x, z, acc, test_err, z_err)]
     return [
         _to_trace(pr, out[0][r], out[1][r], (out[2][r], out[3][r], out[4][r]))
         for r, pr in enumerate(preps)
     ]
+
+
+def run_batch(
+    kernel: MethodKernel,
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    cfgs: Sequence,
+    iters: int,
+) -> List[Trace]:
+    """R runs as ONE vmapped scan — one jit trace, one device dispatch."""
+    preps, statics, consts, steps = _stack_batch(
+        kernel, problems, nets, cfgs, iters
+    )
+    fn = _batch_fn(kernel, _statics_key(statics))
+    x, z, metrics = fn(
+        tuple(jnp.asarray(c) for c in consts),
+        tuple(jnp.asarray(s) for s in steps),
+    )
+    return _unstack_traces(preps, x, z, metrics)
+
+
+# --------------------------------------------------------------------------
+# Mesh-sharded batch execution (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+# Per-device working-set budget for one sharded dispatch, in MiB. The
+# chunking rule is deliberately coarse (inputs + outputs + one 2x slack
+# factor for XLA temporaries); it only needs to keep a huge grid from
+# OOMing a device, not to model the allocator.
+_MEM_BUDGET_ENV = "REPRO_SHARD_MEM_MB"
+_DEFAULT_MEM_MB = 4096
+
+
+def _runs_mesh() -> Mesh:
+    """1-D device mesh over the runs axis (trailing size-1 model axis so
+    `repro.distributed.sharding.AxisLayout` spec inference applies)."""
+    devs = np.array(jax.devices()).reshape(-1, 1)
+    return Mesh(devs, ("runs", "model"))
+
+
+@lru_cache(maxsize=None)
+def _sharded_fn(
+    kernel: MethodKernel,
+    statics_key: tuple,
+    D: int,
+    n_consts: int,
+    n_steps: int,
+    donate: bool,
+):
+    """jit(shard_map(vmap(compose))) over the runs axis of a 1-D mesh.
+
+    shard_map (not bare NamedSharding propagation) because the step's
+    Pallas `coded_admm_update` has no SPMD partitioning rule: under
+    GSPMD, XLA walls the op off and reshards its operands every scan
+    iteration (measured ~50x slower); under shard_map each device runs
+    the whole vmapped scan on its local R/D runs and the Pallas call
+    never sees a partitioned operand. check_rep=False for the same
+    reason (pallas_call has no replication rule). Nothing in the scan
+    crosses the runs axis, so per-run math — and the outputs — are
+    bitwise identical to the single-device vmap.
+    """
+    mesh = _runs_mesh()
+    assert mesh.devices.shape[0] == D  # cache key consistency
+    spec = (
+        tuple(P("runs") for _ in range(n_consts)),
+        tuple(P("runs") for _ in range(n_steps)),
+    )
+    out_spec = (P("runs"), P("runs"), (P("runs"), P("runs"), P("runs")))
+    fn = shard_map(
+        jax.vmap(_compose(kernel, statics_key)),
+        mesh=mesh,
+        in_specs=spec,
+        out_specs=out_spec,
+        check_rep=False,
+    )
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
+def _bytes_per_run(
+    consts, steps, statics: dict, preps: List[Prepared]
+) -> int:
+    """Estimated per-run device footprint: stacked inputs + scan outputs."""
+    R = len(preps)
+    in_bytes = sum(a.nbytes for a in consts + steps) // max(R, 1)
+    iters = int(statics.get("iters", 1))
+    # x/z outputs mirror the largest const (the data block); metrics are
+    # 3 float traces of length iters.
+    out_bytes = 3 * iters * 8
+    for a in consts:
+        out_bytes += a.nbytes // max(R, 1)
+    return max(in_bytes + out_bytes, 1)
+
+
+def _chunk_runs(R_pad: int, D: int, per_run_bytes: int) -> int:
+    """Largest run count per dispatch within the per-device budget,
+    a multiple of the device count D (so every chunk shards evenly)."""
+    budget = int(os.environ.get(_MEM_BUDGET_ENV, _DEFAULT_MEM_MB)) * 2**20
+    fit = (budget * D) // (2 * per_run_bytes)  # 2x slack for temporaries
+    chunk = max(D, (fit // D) * D)
+    return min(chunk, R_pad)
+
+
+def run_sharded(
+    kernel: MethodKernel,
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    cfgs: Sequence,
+    iters: int,
+) -> List[Trace]:
+    """R runs vmapped AND laid out over a device mesh on the runs axis.
+
+    The computation is literally `run_batch`'s vmapped scan, wrapped in
+    `shard_map` over a 1-D `Mesh` of all visible devices: each device
+    executes the scan on its local R/D runs (see `_sharded_fn` for why
+    shard_map rather than GSPMD propagation). Inputs are pre-placed with
+    `NamedSharding`s inferred by `repro.distributed.sharding.batch_specs`
+    so entry into the jitted shard_map moves no data. R is padded to a
+    device-count multiple by repeating the last run (padded outputs are
+    dropped), grids above the `REPRO_SHARD_MEM_MB` per-device budget are
+    split into device-aligned chunks, and input buffers are donated on
+    accelerator backends (XLA does not implement donation on CPU).
+    Bitwise equal to `run_batch` because no op crosses the runs axis;
+    with a single visible device it degrades to exactly `run_batch`.
+    """
+    D = len(jax.devices())
+    if D == 1 or len(problems) == 1:
+        # Structural fallback: one device means nothing to lay out; one
+        # run means padding would make every device compute a duplicate
+        # of the same scan for no wall-clock gain.
+        return run_batch(kernel, problems, nets, cfgs, iters)
+
+    preps, statics, consts, steps = _stack_batch(
+        kernel, problems, nets, cfgs, iters
+    )
+    R = len(preps)
+    mesh = _runs_mesh()
+    layout = AxisLayout(mesh, data=("runs",), model="model")
+    donate = jax.default_backend() in ("tpu", "gpu")
+    fn = _sharded_fn(
+        kernel, _statics_key(statics), D, len(consts), len(steps), donate
+    )
+
+    chunk = _chunk_runs(
+        -(-R // D) * D, D, _bytes_per_run(consts, steps, statics, preps)
+    )
+    outs: List[Tuple] = []
+    for lo in range(0, R, chunk):
+        n = min(chunk, R - lo)
+        csl = tuple(a[lo : lo + n] for a in consts)
+        ssl = tuple(a[lo : lo + n] for a in steps)
+        pad = -(-n // D) * D - n
+        if pad:  # repeat the last run; its outputs are sliced off below
+            csl = tuple(
+                np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                for a in csl
+            )
+            ssl = tuple(
+                np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                for a in ssl
+            )
+        # PartitionSpec is tuple-like, so zip over the inferred specs
+        # rather than tree-mapping across them.
+        cspec, sspec = batch_specs((csl, ssl), layout)
+        put_c = tuple(
+            jax.device_put(a, NamedSharding(mesh, s))
+            for a, s in zip(csl, cspec)
+        )
+        put_s = tuple(
+            jax.device_put(a, NamedSharding(mesh, s))
+            for a, s in zip(ssl, sspec)
+        )
+        x, z, (acc, te, ze) = fn(put_c, put_s)
+        outs.append(
+            tuple(np.asarray(o)[:n] for o in (x, z, acc, te, ze))
+        )
+    cat = [np.concatenate([o[i] for o in outs]) for i in range(5)]
+    return _unstack_traces(preps, cat[0], cat[1], (cat[2], cat[3], cat[4]))

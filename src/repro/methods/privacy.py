@@ -22,7 +22,7 @@ import dataclasses
 import numpy as np
 
 from .admm import ADMMRun, IncrementalADMM
-from .base import Prepared, register
+from .base import register
 
 __all__ = ["PrivacyRun", "PrivateADMM", "PI_ADMM"]
 

@@ -19,7 +19,6 @@ Attention supports:
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

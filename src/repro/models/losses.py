@@ -9,7 +9,7 @@ a_j * B[j,t] (see repro.distributed.consensus).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -303,7 +303,6 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array):
     di, H, P, N, conv_dim = _dims(cfg)
     B_ = token.shape[0]
     x = params["embed"][token]  # (B, 1, D)
-    W = cfg.conv_width
 
     def block(x, layer):
         lp, h_ssm, conv_tail = layer

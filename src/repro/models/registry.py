@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 from . import mamba2, rglru, transformer, whisper
 from .config import ModelConfig

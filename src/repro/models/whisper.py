@@ -13,8 +13,6 @@ once from the encoder output (standard whisper serving trick).
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -28,7 +28,9 @@ def sgd_update(params: Any, grads: Any, lr) -> Any:
 
 
 def adam_init(params: Any) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -1,14 +1,26 @@
 """Test configuration.
 
-Enables float64 for the core-algorithm tests (the paper's convergence claims
-are verified to tolerances below float32 resolution). Model/kernel tests
-request their dtypes explicitly, so this does not affect them.
+Forces 8 CPU host devices (before jax initializes) so the mesh-sharded
+execution tier is exercised by the whole suite: with >1 device visible,
+`run_sweep(mode="auto")` resolves to "sharded" (DESIGN.md §9), so every
+engine==serial equality test doubles as a sharded-correctness test, and
+`tests/test_sharded_sweep.py` pins the three tiers against each other
+explicitly. An externally-set XLA_FLAGS wins (e.g. CI shards that want
+the single real device). `repro/launch/dryrun.py` still forces its own
+512 placeholder devices in its own process.
 
-NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
-tests and benchmarks must see the single real CPU device. Only
-`repro/launch/dryrun.py` forces 512 placeholder devices (in its own process).
+Enables float64 for the core-algorithm tests (the paper's convergence
+claims are verified to tolerances below float32 resolution). Model and
+kernel tests request their dtypes explicitly, so this does not affect
+them.
 """
 
-import jax
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+)
+
+import jax  # noqa: E402  (XLA_FLAGS must be set before jax initializes)
 
 jax.config.update("jax_enable_x64", True)

@@ -8,7 +8,6 @@ from repro.core import (
     StragglerModel,
     allocate,
     make_network,
-    make_synthetic,
     run_incremental_admm,
 )
 from repro.core.problems import _planted

@@ -1,7 +1,6 @@
 """Baseline methods (W-ADMM, D-ADMM, DGD, EXTRA) converge and their
 communication accounting matches the paper's cost model (§IV-B, §V-A)."""
 
-import numpy as np
 import pytest
 
 from repro.core import (

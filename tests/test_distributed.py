@@ -80,7 +80,6 @@ def test_decoded_gradient_invariant_to_stragglers(scheme, K, S):
         w = rt.row_weights(jnp.asarray(alive_np), rows_per_agent)  # (A, rows)
         g = []
         for a in range(A):
-            d = w0[None] - batch_rows[a]
             g.append(-(w[a][:, None] * batch_rows[a]).sum(0) + w[a].sum() * w0)
         return np.stack([np.asarray(x) for x in g])
 
@@ -160,7 +159,8 @@ def test_consensus_converges_quadratic(mode):
 
 def test_auto_spec_rules():
     mesh = jax.sharding.Mesh(
-        np.array(jax.devices() * 1).reshape(1, 1, 1), ("agent", "data", "model")
+        np.array(jax.devices()[:1]).reshape(1, 1, 1),
+        ("agent", "data", "model"),
     )
     # pretend axis sizes via a fake layout
     layout = AxisLayout(mesh, data=("data",), model="model")
@@ -188,7 +188,8 @@ def test_auto_spec_rules():
 
 def test_batch_specs():
     mesh = jax.sharding.Mesh(
-        np.array(jax.devices()).reshape(1, 1, 1), ("agent", "data", "model")
+        np.array(jax.devices()[:1]).reshape(1, 1, 1),
+        ("agent", "data", "model"),
     )
     layout = AxisLayout(mesh, data=("data",), model="model", agent="agent")
     layout.data_size, layout.agent_size = 8, 2

@@ -206,6 +206,7 @@ EXPECTED_GRIDS = {
     "topology_grid": (15, 1),  # S=0 scheme points merge; eta is runtime
     "privacy_grid": (8, 1),  # sigma and S are runtime: one trace
     "compression_grid": (9, 3),  # one trace per compressor static
+    "mesh_scale": (3, 1),  # S=0 schemes merge; S/scheme are runtime
 }
 
 

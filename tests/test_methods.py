@@ -70,7 +70,9 @@ def test_piadmm_sigma_zero_is_exactly_siadmm():
     tr = run_serial(kernel, prob, net, kernel.config(case), ITERS)
     ref = run_incremental_admm(prob, net, case.admm_config(), ITERS)
     np.testing.assert_allclose(tr.accuracy, ref.accuracy, rtol=1e-12)
-    np.testing.assert_allclose(tr.final_z, ref.final_z, rtol=1e-12)
+    np.testing.assert_allclose(
+        tr.final_z, ref.final_z, rtol=1e-12, atol=1e-13
+    )
 
 
 def test_piadmm_noise_perturbs_iterates():
@@ -93,7 +95,12 @@ def test_cq_topk_full_fraction_is_exactly_siadmm():
     tr = run_serial(kernel, prob, net, kernel.config(case), ITERS)
     ref = run_incremental_admm(prob, net, case.admm_config(), ITERS)
     np.testing.assert_allclose(tr.accuracy, ref.accuracy, rtol=1e-12)
-    np.testing.assert_allclose(tr.final_z, ref.final_z, rtol=1e-12)
+    # atol: the two kernels compile into separately-fused executables of
+    # the same step math; XLA's fusion choices around the Pallas x-update
+    # may differ by reassociation, so equality is ULP-level, not bitwise.
+    np.testing.assert_allclose(
+        tr.final_z, ref.final_z, rtol=1e-12, atol=1e-13
+    )
 
 
 def test_cq_comm_accounting():

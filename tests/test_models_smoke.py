@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_smoke_config
-from repro.configs.registry import VIS_PREFIX
 from repro.models import get_model
 
 B, S = 2, 64
