@@ -52,7 +52,10 @@ def run_sweeps(names, rows: Rows, iters=None, runs=None, mode=None) -> dict:
             if f.name != "seed"
             and len({getattr(c, f.name) for c in result.cases}) > 1
         ) or ("method",)
-        emit_rows(result, rows, f"sweep/{spec.name}", by)
+        # Reduce on the sweep's declared evaluation axis (DESIGN.md §10):
+        # the iteration index, or a cumulative field like "sim_time"
+        # (accuracy at the shared time budget).
+        emit_rows(result, rows, f"sweep/{spec.name}", by, x=spec.x_axis)
         summary = dict(
             wall_s=round(result.wall_s, 3),
             dispatches=result.n_dispatches,

@@ -9,7 +9,7 @@ from __future__ import annotations
 import os
 import re
 import tempfile
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +95,15 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore_step(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+def restore_step(
+    ckpt_dir: str, like: Any, step: Optional[int] = None
+) -> Tuple[Any, int]:
+    """Load a step checkpoint into the structure of ``like``.
+
+    Returns ``(tree, step)``: the restored pytree plus the step number it
+    came from (the latest checkpoint in ``ckpt_dir`` when ``step`` is
+    None) — callers resume their loop counters from the second element.
+    """
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")

@@ -18,7 +18,7 @@ from .problems import (
     make_synthetic,
     make_usps_standin,
 )
-from .straggler import StragglerModel, sample_times
+from .timing import StragglerModel, TimingModel, sample_times
 
 __all__ = [
     "ADMMConfig",
@@ -42,5 +42,6 @@ __all__ = [
     "make_usps_standin",
     "make_ijcnn1_standin",
     "StragglerModel",
+    "TimingModel",
     "sample_times",
 ]

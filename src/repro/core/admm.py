@@ -34,7 +34,7 @@ import numpy as np
 from .coding import GradientCode
 from .graph import Network
 from .problems import LeastSquaresProblem
-from .straggler import StragglerModel, sample_times
+from .timing import TimingModel, sample_times
 
 __all__ = [
     "ADMMConfig",
@@ -91,7 +91,7 @@ def make_schedule(
     cfg: ADMMConfig,
     net: Network,
     code: GradientCode,
-    straggler: StragglerModel,
+    straggler: TimingModel,
     iters: int,
     b: int,
 ) -> dict:
@@ -127,7 +127,11 @@ def make_schedule(
         none = ~recv.any(axis=1)
         recv[none, np.argmin(ecn_t[none], axis=1)] = True
         decode = recv * (K / recv.sum(axis=1, keepdims=True))
+        # Response = slowest counted ECN, capped at epsilon — except the
+        # fallback rows, where the agent actually waited out the fastest
+        # ECN's full (> epsilon) response; record that true wait.
         resp = np.minimum(ecn_t.max(axis=1), straggler.epsilon)
+        resp = np.where(none, ecn_t.min(axis=1), resp)
     else:
         order = np.argsort(ecn_t, axis=1)
         alive = np.zeros((iters, K), dtype=bool)
@@ -163,7 +167,7 @@ def run_incremental_admm(
     net: Network,
     cfg: ADMMConfig,
     iters: int,
-    straggler: Optional[StragglerModel] = None,
+    straggler: Optional[TimingModel] = None,
     code: Optional[GradientCode] = None,
 ) -> Trace:
     """Run I-/sI-/csI-ADMM for ``iters`` activations and return the trace.

@@ -41,9 +41,9 @@ def run_wadmm(
     iters: int,
 ) -> Trace:
     """Walkman with the same stochastic proximal-linearized x-update."""
-    from repro.methods import get_kernel, run_serial
+    from repro.methods import ADMMRun, get_kernel, run_serial
 
-    return run_serial(get_kernel("W-ADMM"), problem, net, cfg, iters)
+    return run_serial(get_kernel("W-ADMM"), problem, net, ADMMRun(cfg), iters)
 
 
 def run_dadmm(
@@ -52,9 +52,9 @@ def run_dadmm(
     rho: float,
     iters: int,
 ) -> Trace:
-    from repro.methods import get_kernel, run_serial
+    from repro.methods import GossipRun, get_kernel, run_serial
 
-    return run_serial(get_kernel("D-ADMM"), problem, net, rho, iters)
+    return run_serial(get_kernel("D-ADMM"), problem, net, GossipRun(rho), iters)
 
 
 def run_dgd(
@@ -64,10 +64,11 @@ def run_dgd(
     iters: int,
     diminishing: bool = True,
 ) -> Trace:
-    from repro.methods import get_kernel, run_serial
+    from repro.methods import GossipRun, get_kernel, run_serial
 
     return run_serial(
-        get_kernel("DGD"), problem, net, (alpha0, diminishing), iters
+        get_kernel("DGD"), problem, net,
+        GossipRun(alpha0, diminishing=diminishing), iters,
     )
 
 
@@ -77,6 +78,6 @@ def run_extra(
     alpha: float,
     iters: int,
 ) -> Trace:
-    from repro.methods import get_kernel, run_serial
+    from repro.methods import GossipRun, get_kernel, run_serial
 
-    return run_serial(get_kernel("EXTRA"), problem, net, alpha, iters)
+    return run_serial(get_kernel("EXTRA"), problem, net, GossipRun(alpha), iters)

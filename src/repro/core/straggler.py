@@ -1,63 +1,15 @@
-"""Straggler / timing models for ECN edge computing — paper §V-A.
+"""Back-compat shim: the straggler model grew into `repro.core.timing`.
 
-The paper measures "running time" = communication time among agents (per-link
-uniform U(1e-5, 1e-4) s) + per-iteration response time of the edge compute
-(decided by the slowest needed ECN), with a maximum straggler delay cap
-``epsilon``. csI-ADMM's response time is the R-th fastest ECN; uncoded
-sI-ADMM waits for all K (capped at epsilon, dropping late responses).
-
-We reproduce that timing model exactly; all times are *simulated* (the
-container has no cluster — the paper itself simulates delays on a laptop).
+The paper-era `StragglerModel` (ECN response times with planted
+stragglers, §V-A) is now the unified `TimingModel` that clocks EVERY
+method kernel — gossip rounds and walk steps included — plus the
+heterogeneous-fleet knobs (DESIGN.md §10). Import from
+`repro.core.timing` in new code; this module keeps the original names
+importable.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
+from .timing import StragglerModel, TimingModel, sample_times
 
-import numpy as np
-
-__all__ = ["StragglerModel", "sample_times"]
-
-
-@dataclasses.dataclass(frozen=True)
-class StragglerModel:
-    """Per-ECN response-time distribution with planted stragglers.
-
-    Every ECN draws a base compute time ~ U(base_lo, base_hi). In each
-    iteration, each ECN independently straggles with probability
-    ``p_straggle``; stragglers add a delay ~ Exp(mean=delay). ``epsilon``
-    caps how long an agent will wait (paper's maximum delay parameter).
-    """
-
-    base_lo: float = 1e-4
-    base_hi: float = 2e-4
-    p_straggle: float = 0.1
-    delay: float = 5e-3
-    epsilon: float = 1e-2
-    comm_lo: float = 1e-5  # per-link agent<->agent token time (paper §V-A)
-    comm_hi: float = 1e-4
-
-    def sample_ecn_times(
-        self, iters: int, K: int, rng: np.random.Generator
-    ) -> np.ndarray:
-        """(iters, K) response times (uncapped; caller applies epsilon)."""
-        base = rng.uniform(self.base_lo, self.base_hi, size=(iters, K))
-        straggle = rng.random((iters, K)) < self.p_straggle
-        extra = rng.exponential(self.delay, size=(iters, K))
-        return base + straggle * extra
-
-    def sample_link_times(
-        self, iters: int, rng: np.random.Generator
-    ) -> np.ndarray:
-        """(iters,) per-hop token communication times."""
-        return rng.uniform(self.comm_lo, self.comm_hi, size=iters)
-
-
-def sample_times(
-    model: StragglerModel, iters: int, K: int, seed: int = 0
-) -> Tuple[np.ndarray, np.ndarray]:
-    rng = np.random.default_rng(seed)
-    return model.sample_ecn_times(iters, K, rng), model.sample_link_times(
-        iters, rng
-    )
+__all__ = ["StragglerModel", "TimingModel", "sample_times"]

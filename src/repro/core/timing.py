@@ -1,0 +1,167 @@
+"""Unified simulated wall-clock timing model — every method kernel's clock.
+
+The paper's headline comparisons (Figs. 3(e), 4; §V-A) are on *running
+time*: communication time among agents (per-link uniform U(comm_lo,
+comm_hi) seconds) plus per-iteration compute/response time. One
+`TimingModel` instance is consumed by every `MethodKernel.prepare`
+(DESIGN.md §10), so the accuracy-vs-time axis is comparable across the
+whole registry:
+
+- **ADMM family** (sI-/csI-/I-/pI-/cq-sI-ADMM): per-activation time =
+  ECN response (R-th fastest for coded, epsilon-capped slowest for
+  uncoded — with the true wait recorded when *no* ECN beats the cap)
+  plus one token-hop link time, scaled by the token's true bit cost for
+  compressed variants (`repro.core.admm.make_schedule`).
+- **Gossip** (D-ADMM/DGD/EXTRA): per-round time = slowest-agent compute
+  plus the slowest agent's serialized per-neighbor link transfers
+  (:meth:`TimingModel.gossip_round_times`).
+- **W-ADMM**: per-walk-step time = active-agent compute plus one link
+  hop (:meth:`TimingModel.walk_step_times`).
+
+Heterogeneous-fleet knobs: ``speed_classes`` assigns per-worker speed
+factors round-robin (worker w runs ``speed_classes[w % len]`` times
+slower than the homogeneous base), and ``response`` switches the base
+compute draw between the paper's uniform model and the shifted
+exponential of the coded-computing literature (response-time-aware edge
+models, arXiv 2107.00481). Straggler events stay an *additive*
+exponential delay on top — transient network/queueing stalls, not a
+property of the machine class, so they are deliberately not scaled.
+
+All times are *simulated* (the container has no cluster — the paper
+itself simulates delays on a laptop), and every draw happens HOST-side
+in ``prepare`` so device steps stay pure (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["TimingModel", "StragglerModel", "sample_times"]
+
+_RESPONSES = ("uniform", "shifted_exp")
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingModel:
+    """Per-worker compute/response-time distribution with planted stragglers.
+
+    Every worker (ECN or agent) draws a base compute time — uniform
+    U(base_lo, base_hi), or base_lo + Exp(mean=base_hi - base_lo) when
+    ``response="shifted_exp"`` — multiplied by its speed-class factor.
+    In each iteration, each worker independently straggles with
+    probability ``p_straggle``; stragglers add a delay ~ Exp(mean=delay).
+    ``epsilon`` caps how long an uncoded agent will wait for its ECNs
+    (the paper's maximum delay parameter); it does not apply to workers
+    nobody can drop (gossip rounds, walk steps, the no-response
+    fallback).
+    """
+
+    base_lo: float = 1e-4
+    base_hi: float = 2e-4
+    p_straggle: float = 0.1
+    delay: float = 5e-3
+    epsilon: float = 1e-2
+    comm_lo: float = 1e-5  # per-link agent<->agent token time (paper §V-A)
+    comm_hi: float = 1e-4
+    # Heterogeneous fleet: worker w is speed_classes[w % len] x slower.
+    speed_classes: Tuple[float, ...] = (1.0,)
+    response: str = "uniform"  # "uniform" | "shifted_exp"
+
+    def __post_init__(self) -> None:
+        if self.response not in _RESPONSES:
+            raise ValueError(
+                f"unknown response model {self.response!r}; "
+                f"known: {_RESPONSES}"
+            )
+        if not self.speed_classes or any(
+            s <= 0 for s in self.speed_classes
+        ):
+            raise ValueError(
+                f"speed_classes must be positive, got {self.speed_classes}"
+            )
+
+    # -- worker-level draws ------------------------------------------------
+
+    def speed_factors(self, n: int) -> np.ndarray:
+        """(n,) per-worker slowdown factors, classes assigned round-robin."""
+        return np.resize(np.asarray(self.speed_classes, dtype=float), n)
+
+    def sample_ecn_times(
+        self, iters: int, K: int, rng: np.random.Generator
+    ) -> np.ndarray:
+        """(iters, K) per-worker times (uncapped; caller applies epsilon).
+
+        Also the per-agent compute model of the gossip/walk baselines —
+        one worker is one unit of local computation, whoever runs it.
+        Draw order (base, straggle mask, delay) is part of the seed
+        contract: homogeneous-uniform draws are bit-identical to the
+        original `StragglerModel`.
+        """
+        if self.response == "uniform":
+            base = rng.uniform(self.base_lo, self.base_hi, size=(iters, K))
+        else:  # shifted_exp: same support floor, exponential tail
+            base = self.base_lo + rng.exponential(
+                self.base_hi - self.base_lo, size=(iters, K)
+            )
+        straggle = rng.random((iters, K)) < self.p_straggle
+        extra = rng.exponential(self.delay, size=(iters, K))
+        return base * self.speed_factors(K)[None, :] + straggle * extra
+
+    def sample_link_times(
+        self, iters, rng: np.random.Generator
+    ) -> np.ndarray:
+        """Per-hop token communication times; ``iters`` may be a shape."""
+        return rng.uniform(self.comm_lo, self.comm_hi, size=iters)
+
+    # -- per-kernel composite clocks (DESIGN.md §10) -----------------------
+
+    def gossip_round_times(
+        self, net, iters: int, rng: np.random.Generator
+    ) -> np.ndarray:
+        """(iters,) round times for all-agents-per-step gossip methods.
+
+        A round completes when the slowest agent has (a) computed its
+        local update and (b) pushed one message to each neighbor; an
+        agent's sends serialize over its uplink while distinct agents
+        transmit concurrently, so the link term is the *max over agents*
+        of the sum of their incident per-edge times.
+        """
+        comp = self.sample_ecn_times(iters, net.N, rng)
+        link = self.sample_link_times((iters, net.E), rng)
+        inc = np.zeros((net.E, net.N))
+        for e, (i, j) in enumerate(net.edges):
+            inc[e, i] = inc[e, j] = 1.0
+        per_agent = link @ inc  # (iters, N) serialized neighbor transfers
+        return comp.max(axis=1) + per_agent.max(axis=1)
+
+    def walk_step_times(
+        self, net, agents: np.ndarray, rng: np.random.Generator
+    ) -> np.ndarray:
+        """(iters,) W-ADMM step times: active-agent compute + one hop.
+
+        The walk has no redundancy, so a straggling active agent blocks
+        the token for its full delay — the honest exposure the coded
+        methods are designed to avoid.
+        """
+        iters = len(agents)
+        comp = self.sample_ecn_times(iters, net.N, rng)
+        link = self.sample_link_times(iters, rng)
+        return comp[np.arange(iters), np.asarray(agents, dtype=int)] + link
+
+
+# Backwards-compatible names: the paper-era straggler model IS the
+# homogeneous-uniform TimingModel (identical fields, identical draws).
+StragglerModel = TimingModel
+
+
+def sample_times(
+    model: TimingModel, iters: int, K: int, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(ecn_times, link_times) for one run — the ADMM schedule's draws."""
+    rng = np.random.default_rng(seed)
+    return model.sample_ecn_times(iters, K, rng), model.sample_link_times(
+        iters, rng
+    )

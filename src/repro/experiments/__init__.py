@@ -16,7 +16,7 @@ first-class objects (DESIGN.md §7):
 """
 
 from .registry import SWEEPS, get_sweep
-from .results import emit_rows, mean_ci, reduce_mean, stack_field
+from .results import emit_rows, mean_ci, reduce_mean, resample_runs, stack_field
 from .sweep import Case, SweepResult, SweepSpec, run_sweep
 
 __all__ = [
@@ -28,6 +28,7 @@ __all__ = [
     "get_sweep",
     "mean_ci",
     "reduce_mean",
+    "resample_runs",
     "stack_field",
     "emit_rows",
 ]

@@ -217,7 +217,9 @@ def compression_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
 
 
 def mesh_scale(iters: int = 600, runs: int = 16) -> SweepSpec:
-    """Beyond-paper: the fig5 grid at mesh scale (64 runs default).
+    """Beyond-paper: the fig5 grid at mesh scale (48 runs default — the
+    2x2x16 axis product is 64 grid points, but the `_coded_scheme` fixup
+    merges the S=0 cyclic/fractional points into one uncoded case).
 
     Built to saturate a multi-device mesh: S x scheme x 16 seeds is one
     static group, so the whole grid is ONE sharded dispatch whose runs
@@ -241,16 +243,76 @@ def mesh_scale(iters: int = 600, runs: int = 16) -> SweepSpec:
     )
 
 
+def fig3e_runtime(iters: int = 1500, runs: int = 2) -> SweepSpec:
+    """Fig. 3(e) completed: ALL five fig3 methods on the running-time axis.
+
+    The paper's headline running-time claim compares csI-/sI-ADMM against
+    the state-of-the-art baselines; this sweep puts every fig3 method on
+    the unified simulated clock (DESIGN.md §10) so
+    ``reduce_mean(..., x="sim_time")`` yields the seed-averaged
+    accuracy-vs-running-time curves and the accuracy-at-time-budget
+    readout (EXPERIMENTS.md 'Running time').
+    """
+    return SweepSpec(
+        "fig3e_runtime",
+        Case(
+            dataset="usps", iters=iters, alpha=0.05,
+            p_straggle=0.3, delay=5e-3,
+        ),
+        axes={
+            "method": ["sI-ADMM", "W-ADMM", "D-ADMM", "DGD", "EXTRA"],
+            "seed": list(range(runs)),
+        },
+        fixup=_gossip_iters,
+        description="accuracy vs simulated running time, all fig3 methods",
+        x_axis="sim_time",
+    )
+
+
+def hetero_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
+    """Beyond-paper: heterogeneous-fleet grid — speed-class mix x S x scheme.
+
+    Shifted-exponential ECN responses (the coded-computing response model,
+    arXiv 2107.00481) with per-ECN speed classes assigned round-robin:
+    (1.0,) is the paper's homogeneous fleet, (1.0, 2.0) alternates 2x
+    slower ECNs, (1.0, 1.0, 4.0) plants one 4x straggler class per
+    triple. Crossed with straggler tolerance S and both repetition
+    schemes — the regime where coding should pay off most, since slow
+    classes are *persistently* slow rather than transiently delayed.
+    Speed classes only touch the host-side clock, so the whole grid
+    still shares ONE static signature / dispatch.
+    """
+    return SweepSpec(
+        "hetero_grid",
+        Case(
+            method="csI-ADMM", dataset="synthetic", K=6, M=360,
+            scheme="cyclic", c_tau=0.5, iters=iters,
+            p_straggle=0.3, delay=5e-3, response="shifted_exp",
+        ),
+        axes={
+            "speed_classes": [(1.0,), (1.0, 2.0), (1.0, 1.0, 4.0)],
+            "S": [0, 1, 2],
+            "scheme": ["cyclic", "fractional"],
+            "seed": list(range(runs)),
+        },
+        fixup=_coded_scheme,
+        description="ECN speed-class mix x straggler tolerance x scheme",
+        x_axis="sim_time",
+    )
+
+
 SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig3_minibatch": fig3_minibatch,
     "fig3_baselines": fig3_baselines,
     "fig3_stragglers": fig3_stragglers,
+    "fig3e_runtime": fig3e_runtime,
     "fig4_baselines": fig4_baselines,
     "fig4_stragglers": fig4_stragglers,
     "fig5": fig5,
     "topology_grid": topology_grid,
     "privacy_grid": privacy_grid,
     "compression_grid": compression_grid,
+    "hetero_grid": hetero_grid,
     "mesh_scale": mesh_scale,
 }
 

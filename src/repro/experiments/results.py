@@ -1,7 +1,19 @@
-"""Reduction + emission for sweep results (DESIGN.md §7).
+"""Reduction + emission for sweep results (DESIGN.md §7, §10).
 
 Mean/CI over the seed axis (the paper averages Figs. 3-5 over independent
 runs) and CSV emission compatible with `benchmarks.common.Rows`.
+
+Two reduction axes:
+
+- iteration axis (default): traces align by iteration index, so stacking
+  runs is a plain array stack;
+- cumulative-cost axis (``x="sim_time"`` or ``x="comm_cost"``): each
+  run's clock advances by different amounts per iteration (straggler
+  draws, topologies, compressed hops), so runs are first step-resampled
+  onto a shared grid (`resample_runs`) — the paper's accuracy-vs-running-
+  time comparison (Figs. 3(e), 4) — and the last grid point is the
+  accuracy-at-time-budget readout (the budget is the slowest common
+  horizon, i.e. the smallest final cumulative cost across the group).
 """
 
 from __future__ import annotations
@@ -12,7 +24,13 @@ import numpy as np
 
 from .sweep import SweepResult
 
-__all__ = ["stack_field", "mean_ci", "reduce_mean", "emit_rows"]
+__all__ = [
+    "stack_field",
+    "mean_ci",
+    "resample_runs",
+    "reduce_mean",
+    "emit_rows",
+]
 
 
 def stack_field(traces: Sequence, field: str) -> np.ndarray:
@@ -33,16 +51,54 @@ def mean_ci(
     return mean, z * sem
 
 
+def resample_runs(
+    xs: np.ndarray, ys: np.ndarray, n_points: int = 200
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Step-resample R runs' (cumulative x, metric y) onto a shared grid.
+
+    Args:
+      xs: (R, iters) strictly increasing cumulative cost per run
+        (sim_time / comm_cost).
+      ys: (R, iters) metric recorded at each iteration's completion.
+      n_points: grid resolution.
+
+    Returns (grid, values): ``grid`` is (n_points,) from 0 to the
+    smallest final cost across runs (so no run is extrapolated), and
+    ``values`` is (R, n_points) where values[r, t] is the metric at the
+    last iteration run r completed by grid[t] — a right-continuous step
+    function. Before a run's first completion the first recorded metric
+    is held (the scan records no iteration-0 point).
+    """
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    if xs.ndim != 2 or xs.shape != ys.shape:
+        raise ValueError(f"xs/ys must be (R, iters), got {xs.shape}")
+    grid = np.linspace(0.0, xs[:, -1].min(), n_points)
+    out = np.empty((xs.shape[0], n_points), dtype=ys.dtype)
+    for r in range(xs.shape[0]):
+        idx = np.searchsorted(xs[r], grid, side="right") - 1
+        out[r] = ys[r][np.clip(idx, 0, xs.shape[1] - 1)]
+    return grid, out
+
+
 def reduce_mean(
     result: SweepResult,
     by: Sequence[str],
     field: str = "accuracy",
     z: float = 1.96,
+    x: Optional[str] = None,
+    n_points: int = 200,
 ) -> Dict[tuple, dict]:
     """Group cases by the ``by`` fields; mean/CI the rest (the seed axis).
 
-    Returns {key_tuple: {"mean": (iters,), "ci": (iters,), "n": int,
-    "cases": [Case, ...]}} with keys ordered by first appearance.
+    With ``x`` set to a cumulative Trace field ("sim_time"/"comm_cost"),
+    each group's runs are first step-resampled onto a shared grid of
+    that axis (`resample_runs`), so the mean is an honest
+    accuracy-vs-running-time curve rather than an iteration-index
+    average of misaligned clocks.
+
+    Returns {key_tuple: {"mean": (P,), "ci": (P,), "n": int,
+    "cases": [Case, ...][, "x": (P,) grid]}} with keys ordered by first
+    appearance (P = iters, or n_points when resampled).
     """
     groups: Dict[tuple, List[int]] = {}
     for i, c in enumerate(result.cases):
@@ -50,14 +106,16 @@ def reduce_mean(
         groups.setdefault(key, []).append(i)
     out: Dict[tuple, dict] = {}
     for key, idxs in groups.items():
-        stacked = stack_field([result.traces[i] for i in idxs], field)
-        mean, ci = mean_ci(stacked, axis=0, z=z)
-        out[key] = {
-            "mean": mean,
-            "ci": ci,
-            "n": len(idxs),
-            "cases": [result.cases[i] for i in idxs],
-        }
+        traces = [result.traces[i] for i in idxs]
+        stacked = stack_field(traces, field)
+        entry = {"n": len(idxs), "cases": [result.cases[i] for i in idxs]}
+        if x is not None:
+            grid, stacked = resample_runs(
+                stack_field(traces, x), stacked, n_points
+            )
+            entry["x"] = grid
+        entry["mean"], entry["ci"] = mean_ci(stacked, axis=0, z=z)
+        out[key] = entry
     return out
 
 
@@ -68,14 +126,18 @@ def emit_rows(
     by: Sequence[str],
     field: str = "accuracy",
     extra: Optional[dict] = None,
+    x: Optional[str] = None,
+    n_points: int = 200,
 ) -> Dict[tuple, dict]:
     """Reduce and append one `benchmarks.common.Rows` row per group.
 
     Row name is ``{prefix}/{method}[{by=value,...}]``; the derived column
-    records the final mean +- CI and the run count. Returns the reduction
-    so callers can also plot / post-process.
+    records the final mean +- CI and the run count — on the iteration
+    axis by default, or at the shared cumulative budget when ``x`` is a
+    cumulative Trace field (accuracy-at-time-budget for x="sim_time").
+    Returns the reduction so callers can also plot / post-process.
     """
-    red = reduce_mean(result, by, field=field)
+    red = reduce_mean(result, by, field=field, x=x, n_points=n_points)
     for key, r in red.items():
         case = r["cases"][0]
         kv = ",".join(f"{f}={v}" for f, v in zip(by, key) if f != "method")
@@ -84,6 +146,8 @@ def emit_rows(
             f"final_{field}={r['mean'][-1]:.5f};ci={r['ci'][-1]:.5f};"
             f"runs={r['n']}"
         )
+        if x is not None:
+            derived += f";{x}_budget={r['x'][-1]:.5g}"
         if extra:
             derived += "".join(f";{k}={v}" for k, v in extra.items())
         rows.add(name, 0.0, derived)

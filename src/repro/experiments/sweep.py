@@ -30,7 +30,7 @@ import jax
 from repro.core.admm import ADMMConfig, Trace
 from repro.core.graph import Network, make_network
 from repro.core.problems import DATASETS, LeastSquaresProblem, allocate
-from repro.core.straggler import StragglerModel
+from repro.core.timing import TimingModel
 from repro.methods import (
     KERNELS,
     get_kernel,
@@ -96,11 +96,15 @@ class Case:
     compressor: str = "topk"  # "topk" | "quant"
     frac: float = 0.25  # topk: fraction of token entries kept
     bits: int = 8  # quant: bits per transmitted entry
-    # straggler model (defaults mirror StragglerModel so engine runs match
+    # timing model (defaults mirror TimingModel so engine runs match
     # run_incremental_admm(..., straggler=None) if core defaults move)
-    p_straggle: float = StragglerModel.p_straggle
-    delay: float = StragglerModel.delay
-    epsilon: float = StragglerModel.epsilon
+    p_straggle: float = TimingModel.p_straggle
+    delay: float = TimingModel.delay
+    epsilon: float = TimingModel.epsilon
+    # heterogeneous fleet (DESIGN.md §10): per-worker speed-class factors
+    # (assigned round-robin) and the base response distribution
+    speed_classes: Tuple[float, ...] = TimingModel.speed_classes
+    response: str = TimingModel.response
 
     def admm_config(self) -> ADMMConfig:
         return ADMMConfig(
@@ -116,11 +120,13 @@ class Case:
             seed=self.seed,
         )
 
-    def straggler_model(self) -> StragglerModel:
-        return StragglerModel(
+    def timing_model(self) -> TimingModel:
+        return TimingModel(
             p_straggle=self.p_straggle,
             delay=self.delay,
             epsilon=self.epsilon,
+            speed_classes=self.speed_classes,
+            response=self.response,
         )
 
     def label(self, *fields: str) -> str:
@@ -150,6 +156,10 @@ class SweepSpec:
     axes: Mapping[str, Sequence] = dataclasses.field(default_factory=dict)
     fixup: Optional[Callable[[Case], Case]] = None
     description: str = ""
+    # Evaluation axis of the sweep's headline reduction: None = iteration
+    # index, or a cumulative Trace field ("sim_time"/"comm_cost") that
+    # `reduce_mean`/`emit_rows` resample runs onto (DESIGN.md §10).
+    x_axis: Optional[str] = None
 
     def cases(self) -> List[Case]:
         names = list(self.axes)

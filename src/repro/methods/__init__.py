@@ -18,7 +18,7 @@ from .admm import ADMMRun, IncrementalADMM
 from .base import KERNELS, MethodKernel, Prepared, get_kernel, register
 from .compression import CompressionRun
 from .driver import run_batch, run_serial, run_sharded
-from .gossip import DADMM, DGD, EXTRA
+from .gossip import DADMM, DGD, EXTRA, GossipRun
 from .privacy import PrivacyRun
 from .walkman import WalkmanADMM
 
@@ -32,6 +32,7 @@ __all__ = [
     "run_batch",
     "run_sharded",
     "ADMMRun",
+    "GossipRun",
     "PrivacyRun",
     "CompressionRun",
     "IncrementalADMM",

@@ -40,7 +40,7 @@ from repro.core.admm import ADMMConfig, make_schedule
 from repro.core.coding import GradientCode, make_code
 from repro.core.graph import Network
 from repro.core.problems import LeastSquaresProblem
-from repro.core.straggler import StragglerModel
+from repro.core.timing import TimingModel
 from repro.kernels.ops import coded_admm_update, fit_block_n
 
 from .base import MethodKernel, Prepared, register
@@ -53,7 +53,7 @@ class ADMMRun:
     """Per-run config of the ADMM family: hyper-params + timing model."""
 
     cfg: ADMMConfig
-    straggler: Optional[StragglerModel] = None
+    timing: Optional[TimingModel] = None
     code: Optional[GradientCode] = None
 
 
@@ -71,7 +71,7 @@ class IncrementalADMM(MethodKernel):
     # -- host side ---------------------------------------------------------
 
     def config(self, case) -> ADMMRun:
-        return ADMMRun(case.admm_config(), case.straggler_model())
+        return ADMMRun(case.admm_config(), case.timing_model())
 
     def static_signature(
         self, problem: LeastSquaresProblem, run: ADMMRun, iters: int
@@ -93,12 +93,12 @@ class IncrementalADMM(MethodKernel):
     ) -> Prepared:
         cfg = run.cfg
         cfg.validate()
-        straggler = run.straggler or StragglerModel()
+        timing = run.timing or TimingModel()
         code = run.code or make_code(cfg.scheme, cfg.K, cfg.S, seed=cfg.seed)
         if code.K != cfg.K or code.S != cfg.S:
             raise ValueError("code does not match config (K, S)")
 
-        sched = make_schedule(cfg, net, code, straggler, iters, problem.b)
+        sched = make_schedule(cfg, net, code, timing, iters, problem.b)
         dt = problem.O.dtype
         # Encode->decode folds to per-partition weights host-side: the
         # decoded mini-batch gradient (eq. 6) is
@@ -127,8 +127,14 @@ class IncrementalADMM(MethodKernel):
             statics=self._statics(run, problem, iters, sched),
             max_statics=dict(MU=int(sched["mu"])),
             # One token hop per activation; response + link time per iter.
+            # Compressed tokens (cq-sI-ADMM) ship fewer bits, so their
+            # hop's link time scales by the same true bit cost the
+            # communication accounting charges (DESIGN.md §10).
             comm=np.cumsum(np.full(iters, self._comm_per_iter(run, problem))),
-            sim_time=np.cumsum(sched["resp_time"] + sched["link_time"]),
+            sim_time=np.cumsum(
+                sched["resp_time"]
+                + sched["link_time"] * self._comm_per_iter(run, problem)
+            ),
         )
 
     def _statics(self, run: ADMMRun, problem, iters, sched) -> dict:

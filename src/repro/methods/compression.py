@@ -56,7 +56,7 @@ class CompressedADMM(IncrementalADMM):
     def config(self, case) -> CompressionRun:
         return CompressionRun(
             case.admm_config(),
-            case.straggler_model(),
+            case.timing_model(),
             compressor=case.compressor,
             frac=case.frac,
             bits=case.bits,

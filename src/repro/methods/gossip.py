@@ -4,19 +4,54 @@ Every agent updates every iteration using all its neighbors — 2|E|
 directed messages per iteration versus the incremental methods' single
 token hop. All three consume full local gradients, as in the original
 methods; the consensus model reported in metrics is the agent mean.
+
+Simulated wall-clock: a round costs the slowest agent's compute plus its
+serialized per-neighbor link transfers (`TimingModel.gossip_round_times`,
+DESIGN.md §10), the synchronous-decentralized accounting in the style of
+EXTRA-era analyses (arXiv 1503.08855) — so gossip traces live on the same
+accuracy-vs-running-time axis as the paper's incremental methods.
+Timing draws use the composite seed stream [4, seed] (disjoint from the
+scalar-seeded ADMM schedule streams and privacy/quantization [2|3, seed]).
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Network, metropolis_weights
 from repro.core.problems import LeastSquaresProblem
+from repro.core.timing import TimingModel
 
 from .base import MethodKernel, Prepared, register
 
-__all__ = ["DADMM", "DGD", "EXTRA", "D_ADMM_K", "DGD_K", "EXTRA_K"]
+__all__ = [
+    "GossipRun",
+    "DADMM",
+    "DGD",
+    "EXTRA",
+    "D_ADMM_K",
+    "DGD_K",
+    "EXTRA_K",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipRun:
+    """Per-run config of a gossip baseline: step parameter + clock.
+
+    ``param`` is rho for D-ADMM and alpha for DGD/EXTRA; ``seed`` drives
+    the host-side timing draws (topology/data sampling stays with the
+    problem, as everywhere else).
+    """
+
+    param: float
+    diminishing: bool = False  # DGD: alpha_k = param / sqrt(k)
+    timing: Optional[TimingModel] = None
+    seed: int = 0
 
 
 def _lsq_consts(problem: LeastSquaresProblem, mix: np.ndarray, *scalars):
@@ -33,7 +68,7 @@ def _lsq_consts(problem: LeastSquaresProblem, mix: np.ndarray, *scalars):
 
 
 class _GossipKernel(MethodKernel):
-    """Shared shape/metric plumbing for the all-agents-per-step methods."""
+    """Shared shape/metric/timing plumbing for all-agents-per-step methods."""
 
     def static_signature(
         self, problem: LeastSquaresProblem, cfg, iters: int
@@ -43,6 +78,13 @@ class _GossipKernel(MethodKernel):
             problem.N, problem.b, problem.p, problem.d,
             problem.O_test.shape[0], iters,
         )
+
+    @staticmethod
+    def _sim_time(run: GossipRun, net: Network, iters: int) -> np.ndarray:
+        """Cumulative simulated seconds over gossip rounds (DESIGN.md §10)."""
+        timing = run.timing or TimingModel()
+        rng = np.random.default_rng([4, run.seed])
+        return np.cumsum(timing.gossip_round_times(net, iters, rng))
 
     def _grad(self, aux, x):
         """Stacked full local gradients (N, p, d)."""
@@ -64,10 +106,12 @@ class DADMM(_GossipKernel):
 
     name = "D-ADMM"
 
-    def config(self, case) -> float:
-        return case.rho
+    def config(self, case) -> GossipRun:
+        return GossipRun(
+            case.rho, timing=case.timing_model(), seed=case.seed
+        )
 
-    def prepare(self, problem, net: Network, rho: float, iters: int):
+    def prepare(self, problem, net: Network, run: GossipRun, iters: int):
         dt = problem.O.dtype
         consts = (
             problem.O,
@@ -77,7 +121,7 @@ class DADMM(_GossipKernel):
             problem.x_star().astype(dt),
             problem.O_test,
             problem.T_test,
-            np.asarray(rho, dtype=dt),
+            np.asarray(run.param, dtype=dt),
         )
         return Prepared(
             consts=consts,
@@ -85,7 +129,7 @@ class DADMM(_GossipKernel):
             statics=dict(name=self.name, iters=iters),
             max_statics={},
             comm=np.cumsum(np.full(iters, 2.0 * net.E)),
-            sim_time=np.zeros(iters),
+            sim_time=self._sim_time(run, net, iters),
         )
 
     def setup(self, consts, statics):
@@ -124,15 +168,17 @@ class DGD(_GossipKernel):
 
     name = "DGD"
 
-    def config(self, case):
-        return (case.alpha, True)
+    def config(self, case) -> GossipRun:
+        return GossipRun(
+            case.alpha, diminishing=True,
+            timing=case.timing_model(), seed=case.seed,
+        )
 
-    def prepare(self, problem, net: Network, cfg, iters: int):
-        alpha0, diminishing = cfg
+    def prepare(self, problem, net: Network, run: GossipRun, iters: int):
         steps = (
-            alpha0 / np.sqrt(np.arange(1, iters + 1))
-            if diminishing
-            else np.full(iters, alpha0)
+            run.param / np.sqrt(np.arange(1, iters + 1))
+            if run.diminishing
+            else np.full(iters, run.param)
         )
         return Prepared(
             consts=_lsq_consts(problem, metropolis_weights(net)),
@@ -140,7 +186,7 @@ class DGD(_GossipKernel):
             statics=dict(name=self.name, iters=iters),
             max_statics={},
             comm=np.cumsum(np.full(iters, 2.0 * net.E)),
-            sim_time=np.zeros(iters),
+            sim_time=self._sim_time(run, net, iters),
         )
 
     def setup(self, consts, statics):
@@ -166,17 +212,19 @@ class EXTRA(_GossipKernel):
 
     name = "EXTRA"
 
-    def config(self, case) -> float:
-        return case.alpha
+    def config(self, case) -> GossipRun:
+        return GossipRun(
+            case.alpha, timing=case.timing_model(), seed=case.seed
+        )
 
-    def prepare(self, problem, net: Network, alpha: float, iters: int):
+    def prepare(self, problem, net: Network, run: GossipRun, iters: int):
         return Prepared(
-            consts=_lsq_consts(problem, metropolis_weights(net), alpha),
+            consts=_lsq_consts(problem, metropolis_weights(net), run.param),
             steps=(),
             statics=dict(name=self.name, iters=iters),
             max_statics={},
             comm=np.cumsum(np.full(iters, 2.0 * net.E)),
-            sim_time=np.zeros(iters),
+            sim_time=self._sim_time(run, net, iters),
         )
 
     def setup(self, consts, statics):

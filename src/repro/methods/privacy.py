@@ -39,7 +39,7 @@ class PrivateADMM(IncrementalADMM):
 
     def config(self, case) -> PrivacyRun:
         return PrivacyRun(
-            case.admm_config(), case.straggler_model(), sigma=case.sigma
+            case.admm_config(), case.timing_model(), sigma=case.sigma
         )
 
     def _extra_steps(

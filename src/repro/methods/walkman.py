@@ -4,6 +4,12 @@ Same incremental proximal-linearized updates as sI-ADMM, but the token
 performs a uniform random walk over neighbors (one agent + one link per
 iteration) and the stochastic gradient is a plain contiguous mini-batch
 (no ECN partitioning / coding).
+
+Simulated wall-clock: each walk step costs the active agent's compute
+plus one link hop (`TimingModel.walk_step_times`, DESIGN.md §10) — no
+redundancy, so a straggling agent blocks the token for its full delay.
+Timing draws use the composite seed stream [5, seed], keeping the walk
+itself (scalar-seeded) bit-identical to the pre-timing traces.
 """
 
 from __future__ import annotations
@@ -12,10 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.admm import ADMMConfig
 from repro.core.graph import Network
 from repro.core.problems import LeastSquaresProblem
+from repro.core.timing import TimingModel
 
+from .admm import ADMMRun
 from .base import MethodKernel, Prepared, register
 
 __all__ = ["WalkmanADMM", "W_ADMM"]
@@ -24,14 +31,14 @@ __all__ = ["WalkmanADMM", "W_ADMM"]
 class WalkmanADMM(MethodKernel):
     name = "W-ADMM"
 
-    def config(self, case) -> ADMMConfig:
-        return case.admm_config()
+    def config(self, case) -> ADMMRun:
+        return ADMMRun(case.admm_config(), case.timing_model())
 
     def static_signature(
-        self, problem: LeastSquaresProblem, cfg: ADMMConfig, iters: int
+        self, problem: LeastSquaresProblem, run: ADMMRun, iters: int
     ) -> tuple:
         return (
-            self.name, cfg.M,
+            self.name, run.cfg.M,
             problem.N, problem.b, problem.p, problem.d,
             problem.O_test.shape[0], iters,
         )
@@ -40,9 +47,10 @@ class WalkmanADMM(MethodKernel):
         self,
         problem: LeastSquaresProblem,
         net: Network,
-        cfg: ADMMConfig,
+        run: ADMMRun,
         iters: int,
     ) -> Prepared:
+        cfg = run.cfg
         N, b = problem.N, problem.b
         rng = np.random.default_rng(cfg.seed)
         agents = np.zeros(iters, dtype=np.int32)
@@ -68,7 +76,11 @@ class WalkmanADMM(MethodKernel):
             statics=dict(name=self.name, iters=iters, M=cfg.M, N=N),
             max_statics={},
             comm=np.cumsum(np.ones(iters)),  # one link per walk step
-            sim_time=np.zeros(iters),
+            sim_time=np.cumsum(
+                (run.timing or TimingModel()).walk_step_times(
+                    net, agents, np.random.default_rng([5, cfg.seed])
+                )
+            ),
         )
 
     def setup(self, consts, statics):

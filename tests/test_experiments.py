@@ -86,7 +86,7 @@ def test_vmapped_matches_direct_seed_api():
         prob = allocate(DATASETS[case.dataset](case.seed), case.N, case.K)
         ref = run_incremental_admm(
             prob, net, case.admm_config(), case.iters,
-            straggler=case.straggler_model(),
+            straggler=case.timing_model(),
         )
         np.testing.assert_allclose(
             tr.accuracy, ref.accuracy, rtol=1e-5, atol=1e-5,
@@ -200,12 +200,14 @@ EXPECTED_GRIDS = {
     "fig3_minibatch": (4, 1),  # M is runtime (masked mu): one trace
     "fig3_baselines": (5, 5),  # one method = one kernel = one trace
     "fig3_stragglers": (9, 2),  # K=4 fractional splits off (b, K differ)
+    "fig3e_runtime": (5, 5),  # one method = one kernel = one trace
     "fig4_baselines": (5, 5),
     "fig4_stragglers": (2, 1),  # S/scheme are runtime: one trace
     "fig5": (4, 1),  # the tentpole: whole S sweep shares one trace
     "topology_grid": (15, 1),  # S=0 scheme points merge; eta is runtime
     "privacy_grid": (8, 1),  # sigma and S are runtime: one trace
     "compression_grid": (9, 3),  # one trace per compressor static
+    "hetero_grid": (15, 1),  # speed classes are host-side clock only
     "mesh_scale": (3, 1),  # S=0 schemes merge; S/scheme are runtime
 }
 
@@ -226,3 +228,10 @@ def test_registry_sweep_counts():
         }
         assert len(cases) == n_cases, f"{name}: {len(cases)} cases"
         assert len(sigs) == n_groups, f"{name}: {len(sigs)} static groups"
+
+
+def test_mesh_scale_default_grid_is_48():
+    """The 2 (S) x 2 (scheme) x 16 (seed) axis product is 64 points, but
+    the S=0 cyclic/fractional points dedupe to one uncoded case per seed:
+    48 runs — what the docstring promises and the mesh actually sees."""
+    assert len(get_sweep("mesh_scale").cases()) == 48
