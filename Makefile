@@ -2,15 +2,27 @@ PY := PYTHONPATH=src python
 
 # Sweeps timed by the benchmark-in-CI gate (BENCH_ci.json vs
 # benchmarks/baseline.json); keep in sync with benchmarks/baseline.json.
-BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid
+BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid,code_frontier
 BENCH_JSON := BENCH_ci.json
 
-.PHONY: test test-slow bench bench-smoke bench-json bench-baseline \
-	lint docs-check
+# Coverage floor the CI matrix enforces on the coding + kernel layers
+# (the certification machinery of DESIGN.md §11): combined statement
+# coverage of repro.core.coding and repro.kernels.
+COV_TARGETS := --cov=repro.core.coding --cov=repro.kernels
+COV_FLOOR := 85
+
+.PHONY: test test-cov test-slow bench bench-smoke bench-json \
+	bench-baseline lint docs-check
 
 # Tier-1 verification: the whole suite, stop on first failure.
 test:
 	$(PY) -m pytest -x -q
+
+# Tier-1 suite under pytest-cov with the coding/kernels coverage floor —
+# what the CI matrix runs (requires pytest-cov from requirements-dev.txt).
+test-cov:
+	$(PY) -m pytest -x -q $(COV_TARGETS) --cov-report=term \
+		--cov-report=xml:coverage.xml --cov-fail-under=$(COV_FLOOR)
 
 # Include the slow consensus x all-archs lowering tests.
 test-slow:

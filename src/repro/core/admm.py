@@ -54,7 +54,7 @@ class ADMMConfig:
     M: int = 60  # uncoded-equivalent mini-batch size per activation
     K: int = 3  # ECNs per agent
     S: int = 0  # tolerated stragglers (csI-ADMM); 0 => uncoded sI-ADMM
-    scheme: str = "uncoded"  # "uncoded" | "fractional" | "cyclic"
+    scheme: str = "uncoded"  # key of repro.core.coding.CODE_FAMILIES
     exact_x: bool = False  # True => I-ADMM (closed-form x-update)
     traversal: str = "hamiltonian"  # or "shortest_path"
     seed: int = 0
@@ -132,19 +132,43 @@ def make_schedule(
         # ECN's full (> epsilon) response; record that true wait.
         resp = np.minimum(ecn_t.max(axis=1), straggler.epsilon)
         resp = np.where(none, ecn_t.min(axis=1), resp)
+        alive = recv
     else:
         order = np.argsort(ecn_t, axis=1)
         alive = np.zeros((iters, K), dtype=bool)
         np.put_along_axis(alive, order[:, : code.R], True, axis=1)
-        # Decode vectors depend only on the alive pattern, so solve the
-        # lstsq once per distinct pattern — a sweep samples thousands of
-        # iterations but only ever sees C(K, S) patterns.
-        patterns, inverse = np.unique(alive, axis=0, return_inverse=True)
-        vecs = np.stack([code.decode_vector(a) for a in patterns])
-        decode = vecs[inverse]
         # response time = the R-th fastest ECN, capped at epsilon
         r_th = np.take_along_axis(ecn_t, order[:, code.R - 1 : code.R], axis=1)
         resp = np.minimum(r_th[:, 0], straggler.epsilon)
+        # Deadline-aware decode (DESIGN.md §11): with a partial-recovery
+        # code, an iteration whose R-th response misses the deadline but
+        # that has >= r_min arrivals decodes *at the deadline* from the
+        # arrived set (certified bounded error) — the recorded response
+        # is the deadline itself, not the R-th ECN's wait. Fewer than
+        # r_min arrivals fall back to the exact wait; exact-only
+        # families (min_responses == R) never take this branch.
+        dl = straggler.deadline
+        if dl is not None and code.min_responses < code.R:
+            arrived = ecn_t <= dl
+            n_arr = arrived.sum(axis=1)
+            # "whichever fires first": the deadline only fires when it
+            # strictly beats the exact path's recorded wait — n_arr < R
+            # guarantees the R-th ECN is later, but the epsilon cap
+            # could still undercut a deadline armed above epsilon.
+            use_dl = (
+                (n_arr >= code.min_responses)
+                & (n_arr < code.R)
+                & (dl < resp)
+            )
+            alive = np.where(use_dl[:, None], arrived, alive)
+            resp = np.where(use_dl, dl, resp)
+        # Decode vectors depend only on the alive pattern, so solve the
+        # lstsq once per distinct pattern — a sweep samples thousands of
+        # iterations but only ever sees C(K, S)-ish patterns (plus the
+        # deadline-truncated ones).
+        patterns, inverse = np.unique(alive, axis=0, return_inverse=True)
+        vecs = np.stack([code.decode_vector(a) for a in patterns])
+        decode = vecs[inverse]
 
     tau = cfg.c_tau * np.sqrt(np.arange(1, iters + 1))
     gamma = cfg.c_gamma / np.sqrt(np.arange(1, iters + 1))
@@ -153,6 +177,7 @@ def make_schedule(
         agents=agents,
         offsets=offsets,
         decode=decode,
+        alive=alive,
         tau=tau,
         gamma=gamma,
         resp_time=resp,

@@ -35,7 +35,7 @@ in ``prepare`` so device steps stay pure (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -57,6 +57,15 @@ class TimingModel:
     (the paper's maximum delay parameter); it does not apply to workers
     nobody can drop (gossip rounds, walk steps, the no-response
     fallback).
+
+    ``deadline`` is the per-iteration *decode deadline* (DESIGN.md §11):
+    when set and the gradient code supports partial recovery
+    (``code.min_responses < code.R``), a coded agent decodes at the
+    deadline from whatever >= r_min responses have arrived — with the
+    code's certified bounded error — instead of waiting for the R-th
+    ECN; exact decode still wins whenever the R-th response beats the
+    deadline, and a deadline that catches < r_min responses falls back
+    to the exact wait. Exact-only code families ignore it entirely.
     """
 
     base_lo: float = 1e-4
@@ -69,8 +78,14 @@ class TimingModel:
     # Heterogeneous fleet: worker w is speed_classes[w % len] x slower.
     speed_classes: Tuple[float, ...] = (1.0,)
     response: str = "uniform"  # "uniform" | "shifted_exp"
+    # Decode deadline for partial-recovery codes (None = wait for R).
+    deadline: Optional[float] = None
 
     def __post_init__(self) -> None:
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(
+                f"deadline must be positive or None, got {self.deadline}"
+            )
         if self.response not in _RESPONSES:
             raise ValueError(
                 f"unknown response model {self.response!r}; "

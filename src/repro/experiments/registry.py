@@ -216,6 +216,47 @@ def compression_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
     )
 
 
+def _frontier_deadline(c: Case) -> Case:
+    """Exact-only families ignore the decode deadline (it is a no-op in
+    the schedule), so their deadline grid points merge into one case;
+    S=0 points run uncoded as everywhere else."""
+    c = _coded_scheme(c)
+    if c.scheme != "approx":
+        c = dataclasses.replace(c, deadline=None)
+    return c
+
+
+def code_frontier(iters: int = 800, runs: int = 3) -> SweepSpec:
+    """Beyond-paper headline: code family x S x decode deadline frontier.
+
+    Every registered exact family (cyclic S+1-replication, MDS full
+    replication) against the partial-recovery `approx` family with and
+    without a decode deadline (DESIGN.md §11): the deadline trades a
+    certified decode error for never waiting past `deadline` seconds on
+    a straggling R-th ECN, so the accuracy-vs-sim_time frontier shows
+    where bounded-error decoding beats waiting. All axes are host-side
+    (decode weights, masks, clocks), so the whole grid is ONE dispatch
+    — same static signature as the fig5 family.
+    """
+    return SweepSpec(
+        "code_frontier",
+        Case(
+            method="csI-ADMM", dataset="synthetic", K=6, M=360,
+            scheme="cyclic", c_tau=0.5, iters=iters,
+            p_straggle=0.3, delay=5e-3,
+        ),
+        axes={
+            "scheme": ["cyclic", "mds", "approx"],
+            "S": [1, 2],
+            "deadline": [None, 3e-4, 1e-3],
+            "seed": list(range(runs)),
+        },
+        fixup=_frontier_deadline,
+        description="code family x straggler tolerance x decode deadline",
+        x_axis="sim_time",
+    )
+
+
 def mesh_scale(iters: int = 600, runs: int = 16) -> SweepSpec:
     """Beyond-paper: the fig5 grid at mesh scale (48 runs default — the
     2x2x16 axis product is 64 grid points, but the `_coded_scheme` fixup
@@ -311,6 +352,7 @@ SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig5": fig5,
     "topology_grid": topology_grid,
     "privacy_grid": privacy_grid,
+    "code_frontier": code_frontier,
     "compression_grid": compression_grid,
     "hetero_grid": hetero_grid,
     "mesh_scale": mesh_scale,

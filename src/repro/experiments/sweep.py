@@ -105,6 +105,8 @@ class Case:
     # (assigned round-robin) and the base response distribution
     speed_classes: Tuple[float, ...] = TimingModel.speed_classes
     response: str = TimingModel.response
+    # decode deadline for partial-recovery code families (DESIGN.md §11)
+    deadline: Optional[float] = TimingModel.deadline
 
     def admm_config(self) -> ADMMConfig:
         return ADMMConfig(
@@ -127,6 +129,7 @@ class Case:
             epsilon=self.epsilon,
             speed_classes=self.speed_classes,
             response=self.response,
+            deadline=self.deadline,
         )
 
     def label(self, *fields: str) -> str:

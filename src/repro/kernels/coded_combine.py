@@ -11,6 +11,13 @@ tile of messages plus (1, block_n) tiles of x/y/z in VMEM. J is tiny (= K
 ECNs, 3..16) so VMEM footprint ~ (J+4)·block_n·4B — block_n = 16384 at
 J = 16 is ~1.3 MB, well inside the ~16 MB/core budget, and the last-dim
 tile is a multiple of 128 lanes.
+
+Both kernels take a runtime (J,) ``mask`` alongside the decode
+coefficients (DESIGN.md §11): dead message rows are hard-zeroed with a
+``where`` BEFORE the weighted reduction, so garbage in never-arrived
+rows — including NaN/Inf, which ``0 * NaN`` would propagate — cannot
+pollute the decode. Coefficients and mask are data, not statics: every
+straggler pattern and deadline truncation of a sweep reuses ONE trace.
 """
 
 from __future__ import annotations
@@ -31,9 +38,18 @@ def _compute_dtype(dtype) -> jnp.dtype:
     return jnp.promote_types(dtype, jnp.float32)
 
 
-def _combine_body(msgs_ref, coeffs_ref, out_ref):
+def _masked(msgs_ref, mask_ref, ct):
+    """Dead rows -> exact zeros via where (NaN-safe, unlike 0 * NaN)."""
+    return jnp.where(
+        mask_ref[...].astype(jnp.float32) > 0.0,
+        msgs_ref[...].astype(ct),
+        jnp.zeros((), ct),
+    )
+
+
+def _combine_body(msgs_ref, coeffs_ref, mask_ref, out_ref):
     ct = _compute_dtype(msgs_ref.dtype)
-    m = msgs_ref[...].astype(ct)  # (J, bn)
+    m = _masked(msgs_ref, mask_ref, ct)  # (J, bn)
     c = coeffs_ref[...].astype(ct)  # (J, 1)
     out_ref[...] = jnp.sum(m * c, axis=0, keepdims=True).astype(out_ref.dtype)
 
@@ -41,32 +57,37 @@ def _combine_body(msgs_ref, coeffs_ref, out_ref):
 def coded_combine_kernel(
     msgs: jax.Array,  # (J, n) — n a multiple of block_n (ops.py pads)
     coeffs: jax.Array,  # (J,)
+    mask: jax.Array,  # (J,) >0 = row alive
     *,
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = False,
 ) -> jax.Array:
-    """out (n,) = sum_j coeffs[j] * msgs[j], accumulated in >= f32."""
+    """out (n,) = sum_j coeffs[j] * mask[j]>0 * msgs[j], acc in >= f32."""
     J, n = msgs.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
+    col = pl.BlockSpec((J, 1), lambda i: (0, 0))
     out = pl.pallas_call(
         _combine_body,
         grid=grid,
         in_specs=[
             pl.BlockSpec((J, block_n), lambda i: (0, i)),
-            pl.BlockSpec((J, 1), lambda i: (0, 0)),
+            col,
+            col,
         ],
         out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n), _compute_dtype(msgs.dtype)),
         interpret=interpret,
         name="coded_combine",
-    )(msgs, coeffs.reshape(J, 1))
+    )(msgs, coeffs.reshape(J, 1), mask.reshape(J, 1))
     return out[0]
 
 
-def _admm_body(msgs_ref, coeffs_ref, x_ref, y_ref, z_ref, scal_ref, out_ref):
+def _admm_body(
+    msgs_ref, coeffs_ref, mask_ref, x_ref, y_ref, z_ref, scal_ref, out_ref
+):
     ct = _compute_dtype(x_ref.dtype)
-    m = msgs_ref[...].astype(ct)  # (J, bn)
+    m = _masked(msgs_ref, mask_ref, ct)  # (J, bn)
     c = coeffs_ref[...].astype(ct)  # (J, 1)
     G = jnp.sum(m * c, axis=0, keepdims=True)  # (1, bn)
     tau = scal_ref[0, 0].astype(ct)
@@ -83,6 +104,7 @@ def _admm_body(msgs_ref, coeffs_ref, x_ref, y_ref, z_ref, scal_ref, out_ref):
 def coded_admm_update_kernel(
     msgs: jax.Array,  # (J, n)
     coeffs: jax.Array,  # (J,)
+    mask: jax.Array,  # (J,) >0 = row alive
     x: jax.Array,  # (n,)
     y: jax.Array,  # (n,)
     z: jax.Array,  # (n,)
@@ -96,6 +118,7 @@ def coded_admm_update_kernel(
 
     ``tau`` and ``rho`` may be traced scalars (the method step passes the
     per-iteration schedule value); both ride in via the (1, 2) scal tile.
+    ``mask`` hard-zeroes dead message rows before the reduction.
     """
     J, n = msgs.shape
     assert n % block_n == 0, (n, block_n)
@@ -105,12 +128,14 @@ def coded_admm_update_kernel(
         [jnp.asarray(tau, st), jnp.asarray(rho, st)]
     ).reshape(1, 2)
     row = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    col = pl.BlockSpec((J, 1), lambda i: (0, 0))
     out = pl.pallas_call(
         _admm_body,
         grid=grid,
         in_specs=[
             pl.BlockSpec((J, block_n), lambda i: (0, i)),
-            pl.BlockSpec((J, 1), lambda i: (0, 0)),
+            col,
+            col,
             row,
             row,
             row,
@@ -120,5 +145,6 @@ def coded_admm_update_kernel(
         out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
         interpret=interpret,
         name="coded_admm_update",
-    )(msgs, coeffs.reshape(J, 1), x[None], y[None], z[None], scal)
+    )(msgs, coeffs.reshape(J, 1), mask.reshape(J, 1), x[None], y[None],
+      z[None], scal)
     return out[0]

@@ -52,17 +52,36 @@ def fit_block_n(n: int, block_n: int = 4096, lane: int = 128) -> int:
 # --------------------------------------------------------------------------
 
 
+def _row_mask(mask, J, dtype) -> jax.Array:
+    """Runtime alive mask, defaulting to all-alive. Always a traced (J,)
+    array — mask VALUES never force a re-trace, only presence/absence
+    (two cached traces at most per shape)."""
+    if mask is None:
+        return jnp.ones((J,), dtype)
+    return jnp.asarray(mask, dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n",))
 def coded_combine(
-    msgs: jax.Array, coeffs: jax.Array, *, block_n: int = 4096
+    msgs: jax.Array,
+    coeffs: jax.Array,
+    mask: Optional[jax.Array] = None,
+    *,
+    block_n: int = 4096,
 ) -> jax.Array:
-    """sum_j coeffs[j]*msgs[j] over flat message rows. msgs (J, n)."""
+    """sum_j coeffs[j]*mask[j]*msgs[j] over flat message rows. msgs (J, n).
+
+    ``mask`` (J,) marks alive rows (>0); dead rows are where-zeroed in
+    the kernel so garbage (even NaN) in never-arrived messages cannot
+    leak into the decode (DESIGN.md §11). None = all rows alive.
+    """
     J, n = msgs.shape
     n_pad = _pad_to(n, block_n)
     if n_pad != n:
         msgs = jnp.pad(msgs, ((0, 0), (0, n_pad - n)))
     out = coded_combine_kernel(
-        msgs, coeffs, block_n=block_n, interpret=_interpret()
+        msgs, coeffs, _row_mask(mask, J, jnp.float32),
+        block_n=block_n, interpret=_interpret(),
     )
     return out[:n]
 
@@ -76,14 +95,16 @@ def coded_admm_update(
     z: jax.Array,
     tau: jax.Array,
     rho: jax.Array,
+    mask: Optional[jax.Array] = None,
     *,
     block_n: int = 4096,
 ) -> jax.Array:
     """Fused decode + eq. (5a) x-update over flat parameter vectors.
 
-    ``rho``/``tau`` are runtime scalars (python floats or traced arrays):
-    the method-kernel scan feeds per-iteration schedule values, so neither
-    may force a re-trace."""
+    ``rho``/``tau`` are runtime scalars (python floats or traced arrays)
+    and ``mask`` (J,) is a runtime alive-row mask: the method-kernel scan
+    feeds per-iteration schedule values — decode coefficients, deadline
+    truncation masks, step sizes — so none may force a re-trace."""
     J, n = msgs.shape
     n_pad = _pad_to(n, block_n)
     if n_pad != n:
@@ -93,7 +114,8 @@ def coded_admm_update(
         y = jnp.pad(y, (0, n_pad - n))
         z = jnp.pad(z, (0, n_pad - n))
     out = coded_admm_update_kernel(
-        msgs, coeffs, x, y, z, tau, rho, block_n=block_n, interpret=_interpret()
+        msgs, coeffs, _row_mask(mask, J, jnp.float32), x, y, z, tau, rho,
+        block_n=block_n, interpret=_interpret(),
     )
     return out[:n]
 

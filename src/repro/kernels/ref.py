@@ -21,11 +21,22 @@ __all__ = [
 ]
 
 
-def coded_combine_ref(msgs: jax.Array, coeffs: jax.Array) -> jax.Array:
-    """out = sum_j coeffs[j] * msgs[j] in f32. msgs (J, n), coeffs (J,)."""
-    return jnp.tensordot(
-        coeffs.astype(jnp.float32), msgs.astype(jnp.float32), axes=1
-    )
+def coded_combine_ref(
+    msgs: jax.Array,
+    coeffs: jax.Array,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """out = sum_j coeffs[j] * mask[j]>0 * msgs[j] in the accumulation
+    dtype (f32, or f64 under x64). msgs (J, n), coeffs/mask (J,).
+
+    ``mask`` where-zeroes dead rows BEFORE the reduction, mirroring the
+    kernel's NaN-safe guard (0 * NaN would be NaN, where is not).
+    """
+    ct = jnp.promote_types(msgs.dtype, jnp.float32)
+    m = msgs.astype(ct)
+    if mask is not None:
+        m = jnp.where(mask[:, None] > 0, m, jnp.zeros((), ct))
+    return jnp.tensordot(coeffs.astype(ct), m, axes=1)
 
 
 def coded_admm_update_ref(
@@ -36,14 +47,17 @@ def coded_admm_update_ref(
     z: jax.Array,  # (n,)
     tau: jax.Array,  # scalar tau^k
     rho: float,
+    mask: Optional[jax.Array] = None,  # (J,) alive rows (>0)
 ) -> jax.Array:
     """Fused decode + proximal x-update (eq. 5a):
 
-    G = sum_j coeffs[j] msgs[j];  x+ = (tau x + rho z + y - G) / (rho + tau).
+    G = sum_j coeffs[j] mask[j] msgs[j];
+    x+ = (tau x + rho z + y - G) / (rho + tau).
     """
-    G = coded_combine_ref(msgs, coeffs)
-    t = tau.astype(jnp.float32)
-    num = t * x.astype(jnp.float32) + rho * z.astype(jnp.float32) + y.astype(jnp.float32) - G
+    G = coded_combine_ref(msgs, coeffs, mask)
+    ct = G.dtype
+    t = tau.astype(ct)
+    num = t * x.astype(ct) + rho * z.astype(ct) + y.astype(ct) - G
     return (num / (rho + t)).astype(x.dtype)
 
 

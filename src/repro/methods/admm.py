@@ -104,6 +104,15 @@ class IncrementalADMM(MethodKernel):
         # decoded mini-batch gradient (eq. 6) is
         #   G = (1/K) sum_j a_j sum_t B[j,t] g~_t = sum_t w_t g~_t.
         W_steps = (sched["decode"].astype(dt) @ code.B.astype(dt)) / cfg.K
+        # Runtime live-partition mask for the fused kernel (DESIGN.md
+        # §11): partition t is live iff some alive ECN covers it, so the
+        # kernel hard-zeroes the rest independently of the folded
+        # weights. Exact-decode-at-R vs approximate-decode-at-deadline
+        # is already selected per iteration by `make_schedule` — the
+        # mask and coefficients are per-step DATA, so every deadline
+        # pattern shares one jit trace.
+        cover = np.abs(code.B) > 1e-12  # (K ecn, K partition)
+        wmask = (sched["alive"].astype(dt) @ cover.astype(dt)) > 0
         return Prepared(
             consts=(
                 problem.O,
@@ -122,6 +131,7 @@ class IncrementalADMM(MethodKernel):
                     W_steps,
                     sched["tau"].astype(dt),
                     sched["gamma"].astype(dt),
+                    wmask.astype(dt),
                 ),
             ),
             statics=self._statics(run, problem, iters, sched),
@@ -224,10 +234,12 @@ class IncrementalADMM(MethodKernel):
                 statics["K"], -1
             )
             # Fused decode-combine + eq. (5a) through the Pallas hot path
-            # (DESIGN.md §5); w already folds a^T B / K, so coeffs = w.
+            # (DESIGN.md §5); w already folds a^T B / K, so coeffs = w,
+            # and inp[5] is the live-partition mask of this iteration's
+            # alive set (exact-at-R or deadline-truncated, DESIGN.md §11).
             x_new = coded_admm_update(
                 msgs, w, xi.ravel(), yi.ravel(), z.ravel(), tk, rho,
-                block_n=aux["block_n"],
+                inp[5], block_n=aux["block_n"],
             ).reshape(xi.shape)
 
         x_new = self._perturb_x(x_new, inp, aux, statics)

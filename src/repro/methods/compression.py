@@ -123,7 +123,7 @@ class CompressedADMM(IncrementalADMM):
             L = statics["levels"]
             scale = jnp.max(jnp.abs(u))
             y = jnp.abs(u) / jnp.maximum(scale, 1e-30) * L
-            q = jnp.floor(y + inp[5])  # stochastic rounding
+            q = jnp.floor(y + inp[6])  # stochastic rounding
             c = jnp.where(
                 scale > 0.0, jnp.sign(u) * q * scale / L, jnp.zeros_like(u)
             )

@@ -57,7 +57,7 @@ class PrivateADMM(IncrementalADMM):
         return steps + (noise.astype(dt),)
 
     def _perturb_x(self, x_new, inp, aux, statics):
-        return x_new + inp[5]
+        return x_new + inp[6]
 
 
 PI_ADMM = register(PrivateADMM())

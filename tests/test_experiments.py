@@ -205,6 +205,8 @@ EXPECTED_GRIDS = {
     "fig4_stragglers": (2, 1),  # S/scheme are runtime: one trace
     "fig5": (4, 1),  # the tentpole: whole S sweep shares one trace
     "topology_grid": (15, 1),  # S=0 scheme points merge; eta is runtime
+    "code_frontier": (10, 1),  # deadline merges for exact families
+
     "privacy_grid": (8, 1),  # sigma and S are runtime: one trace
     "compression_grid": (9, 3),  # one trace per compressor static
     "hetero_grid": (15, 1),  # speed classes are host-side clock only

@@ -70,6 +70,136 @@ def test_coded_admm_update(J, n, dtype):
     )
 
 
+def test_coded_combine_mask_guards_dead_rows():
+    """Dead message rows are where-zeroed BEFORE the reduction: NaN/Inf
+    garbage in never-arrived rows must not pollute the decode (a plain
+    0 * NaN multiply would)."""
+    J, n = 4, 1000
+    rng = np.random.default_rng(0)
+    msgs = rng.standard_normal((J, n)).astype(np.float32)
+    msgs[2] = np.nan  # ECN 2 never responded; its buffer is garbage
+    msgs[3] = np.inf
+    coeffs = rng.standard_normal(J).astype(np.float32)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    out = coded_combine(jnp.asarray(msgs), jnp.asarray(coeffs), mask)
+    ref = coded_combine_ref(jnp.asarray(msgs), jnp.asarray(coeffs), mask)
+    expect = coeffs[0] * msgs[0] + coeffs[1] * msgs[1]
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_coded_admm_update_mask_parity(dtype):
+    """Kernel == oracle for masked decode patterns (deadline truncation)."""
+    J, n = 6, 5000
+    keys = jax.random.split(jax.random.key(17), 5)
+    msgs = _rand(keys[0], (J, n), dtype)
+    coeffs = _rand(keys[1], (J,), jnp.float32)
+    x = _rand(keys[2], (n,), dtype)
+    y = _rand(keys[3], (n,), dtype)
+    z = _rand(keys[4], (n,), dtype)
+    tau = jnp.asarray(1.3, jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1], jnp.float32)
+    out = coded_admm_update(msgs, coeffs, x, y, z, tau, 0.9, mask)
+    ref = coded_admm_update_ref(msgs, coeffs, x, y, z, tau, 0.9, mask)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("family,K,S", [("mds", 6, 2), ("approx", 6, 2)])
+def test_coded_kernels_real_family_patterns(family, K, S):
+    """The new families' actual decode vectors — including a
+    deadline-truncated sub-R pattern for the partial-recovery family —
+    drive the fused kernel to the same update as the dense oracle and
+    the analytic eq. (5a)."""
+    from repro.core.coding import make_code
+
+    code = make_code(family, K, S, seed=0)
+    n = 700
+    rng = np.random.default_rng(5)
+    gbar = rng.standard_normal((K, n)).astype(np.float32)
+    msgs = (code.B.astype(np.float32) @ gbar).astype(np.float32)
+    patterns = [np.arange(K) >= S]  # an exact-at-R alive set
+    if code.min_responses < code.R:
+        trunc = np.zeros(K, dtype=bool)  # deadline caught r_min + 1 rows
+        trunc[: code.min_responses + 1] = True
+        patterns.append(trunc)
+    for alive in patterns:
+        a = code.decode_vector(alive).astype(np.float32)
+        x = rng.standard_normal(n).astype(np.float32)
+        y = rng.standard_normal(n).astype(np.float32)
+        z = rng.standard_normal(n).astype(np.float32)
+        tau, rho = 1.7, 0.8
+        G = (a @ msgs) / K
+        expect = (tau * x + rho * z + y - G) / (rho + tau)
+        args = (
+            jnp.asarray(msgs), jnp.asarray(a / K), jnp.asarray(x),
+            jnp.asarray(y), jnp.asarray(z), jnp.asarray(tau), rho,
+            jnp.asarray(alive, jnp.float32),
+        )
+        out = coded_admm_update(*args)
+        ref = coded_admm_update_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_coded_kernels_f64_interpret_parity():
+    """Under x64 the interpret-mode kernels accumulate in f64 end to end
+    (the convergence suite's precision floor): parity vs the oracle at
+    f64-tight tolerance."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        J, n = 5, 3000
+        rng = np.random.default_rng(7)
+        msgs = jnp.asarray(rng.standard_normal((J, n)))
+        coeffs = jnp.asarray(rng.standard_normal(J))
+        x, y, z = (jnp.asarray(rng.standard_normal(n)) for _ in range(3))
+        mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0])
+        tau = jnp.asarray(2.2)
+        assert msgs.dtype == jnp.float64
+        out_c = coded_combine(msgs, coeffs, mask)
+        ref_c = coded_combine_ref(msgs, coeffs, mask)
+        assert out_c.dtype == jnp.float64
+        np.testing.assert_allclose(
+            np.asarray(out_c), np.asarray(ref_c), rtol=1e-12, atol=1e-12
+        )
+        out_u = coded_admm_update(msgs, coeffs, x, y, z, tau, 0.7, mask)
+        ref_u = coded_admm_update_ref(msgs, coeffs, x, y, z, tau, 0.7, mask)
+        assert out_u.dtype == jnp.float64
+        np.testing.assert_allclose(
+            np.asarray(out_u), np.asarray(ref_u), rtol=1e-12, atol=1e-12
+        )
+
+
+def test_runtime_coeffs_and_mask_do_not_retrace():
+    """Decode coefficients and deadline masks are DATA: feeding new
+    values (new straggler patterns, new deadlines) must reuse the one
+    compiled trace — the property that lets a whole code_frontier sweep
+    share a single dispatch."""
+    J, n = 4, 4096
+    key = jax.random.key(3)
+    msgs = _rand(key, (J, n), jnp.float32)
+    x = y = z = _rand(key, (n,), jnp.float32)
+    tau = jnp.asarray(1.0, jnp.float32)
+
+    def call(c, m):
+        return coded_admm_update(
+            msgs, jnp.asarray(c, jnp.float32), x, y, z, tau, 1.0,
+            jnp.asarray(m, jnp.float32),
+        )
+
+    call([1.0, 2.0, 3.0, 4.0], [1, 1, 1, 1])
+    size0 = coded_admm_update._cache_size()
+    call([0.5, 0.0, -1.0, 2.0], [1, 0, 1, 1])  # new pattern
+    call([9.0, 9.0, 9.0, 9.0], [0, 0, 1, 0])  # deadline truncation
+    assert coded_admm_update._cache_size() == size0
+
+
 def test_coded_admm_update_matches_scan_admm_equation():
     """The fused kernel must equal the decode+x-update used in core.admm."""
     from repro.core.coding import paper_fig2_code

@@ -174,6 +174,132 @@ def test_hetero_slowdown_reaches_the_admm_clock():
 
 
 # -------------------------------------------------------------------------
+# deadline-aware decode (DESIGN.md §11)
+# -------------------------------------------------------------------------
+
+
+def _coded_schedule(scheme: str, K: int, S: int, model: TimingModel, iters=400):
+    cfg = ADMMConfig(M=(S + 1) * K * 4, K=K, S=S, scheme=scheme)
+    net = make_network(5, 0.5, seed=0)
+    code = make_code(scheme, K, S, seed=cfg.seed)
+    sched = make_schedule(cfg, net, code, model, iters, b=cfg.M * 2)
+    rng = np.random.default_rng(cfg.seed + 1)
+    ecn_t = model.sample_ecn_times(iters, K, rng)
+    return code, sched, ecn_t
+
+
+def test_deadline_decode_records_deadline_not_ecn_wait():
+    """The satellite guard: iterations that decode at the deadline must
+    record the DEADLINE as their response time — not the R-th (slowest
+    counted) ECN wait — and their decode vectors must be supported on
+    exactly the ECNs that had arrived by the deadline."""
+    model = TimingModel(p_straggle=0.3, delay=5e-3, deadline=3e-4)
+    code, sched, ecn_t = _coded_schedule("approx", 6, 2, model)
+    arrived = ecn_t <= model.deadline
+    n_arr = arrived.sum(axis=1)
+    order = np.sort(ecn_t, axis=1)
+    t_exact = order[:, code.R - 1]
+    fired = (n_arr >= code.min_responses) & (n_arr < code.R)
+    assert fired.any() and not fired.all()  # both paths exercised
+    np.testing.assert_allclose(
+        sched["resp_time"][fired], model.deadline
+    )
+    # the deadline wait is strictly shorter than the exact-decode wait
+    assert (model.deadline < t_exact[fired]).all()
+    # non-deadline rows keep the epsilon-capped R-th fastest response
+    np.testing.assert_allclose(
+        sched["resp_time"][~fired],
+        np.minimum(t_exact[~fired], model.epsilon),
+    )
+    # decode supported on the arrived set only, alive mask recorded
+    np.testing.assert_array_equal(sched["alive"][fired], arrived[fired])
+    assert (sched["decode"][fired][~arrived[fired]] == 0).all()
+
+
+def test_deadline_below_rmin_falls_back_to_exact_wait():
+    """A deadline nobody can meet (shorter than every base draw) never
+    fires: every iteration decodes exactly at the R-th response."""
+    model = TimingModel(p_straggle=0.3, delay=5e-3, deadline=1e-6)
+    code, sched, ecn_t = _coded_schedule("approx", 6, 2, model)
+    t_exact = np.sort(ecn_t, axis=1)[:, code.R - 1]
+    np.testing.assert_allclose(
+        sched["resp_time"], np.minimum(t_exact, model.epsilon)
+    )
+
+
+def test_deadline_above_epsilon_never_fires():
+    """'Whichever fires first' also holds against the epsilon cap: a
+    deadline armed ABOVE epsilon can never beat the exact path's capped
+    wait, so it must not fire (firing would record a LONGER wait plus a
+    decode error)."""
+    model = TimingModel(
+        p_straggle=0.3, delay=5e-3, epsilon=1e-3, deadline=2e-3
+    )
+    exact = TimingModel(p_straggle=0.3, delay=5e-3, epsilon=1e-3)
+    _, s_dl, _ = _coded_schedule("approx", 6, 2, model)
+    _, s_ex, _ = _coded_schedule("approx", 6, 2, exact)
+    for f in ("resp_time", "decode", "alive"):
+        np.testing.assert_array_equal(s_dl[f], s_ex[f])
+    assert (s_dl["resp_time"] <= model.epsilon).all()
+
+
+def test_deadline_noop_for_exact_families():
+    """Exact-only families (min_responses == R) ignore the deadline: the
+    schedule is bit-identical with and without it."""
+    with_dl = TimingModel(p_straggle=0.3, deadline=3e-4)
+    without = TimingModel(p_straggle=0.3)
+    for scheme in ("cyclic", "fractional"):
+        _, s1, _ = _coded_schedule(scheme, 6, 2, with_dl)
+        _, s2, _ = _coded_schedule(scheme, 6, 2, without)
+        for f in ("resp_time", "decode", "alive"):
+            np.testing.assert_array_equal(s1[f], s2[f], err_msg=scheme)
+
+
+def test_deadline_shortens_admm_clock_end_to_end():
+    """Case -> kernel.prepare: a deadline-decoding run's cumulative
+    sim_time is strictly below the exact-decode run's (same draws)."""
+    base = dict(scheme="approx", S=1, p_straggle=0.3, delay=5e-3)
+    exact = _prepared(_case("csI-ADMM", **base))
+    dl = _prepared(_case("csI-ADMM", **base, deadline=3e-4))
+    assert dl.sim_time[-1] < exact.sim_time[-1]
+
+
+def test_timing_model_deadline_validation():
+    with pytest.raises(ValueError, match="deadline"):
+        TimingModel(deadline=0.0)
+    with pytest.raises(ValueError, match="deadline"):
+        TimingModel(deadline=-1e-3)
+    assert TimingModel(deadline=None).deadline is None
+
+
+def test_code_frontier_single_dispatch_and_tier_agreement():
+    """Acceptance criterion: the code_frontier grid is ONE dispatch, and
+    serial/batched/sharded agree elementwise on the sim_time-axis
+    reduction (the sweep's declared headline axis)."""
+    spec = get_sweep("code_frontier", iters=40, runs=2)
+    batched = run_sweep(spec, mode="batched")
+    assert batched.n_dispatches == 1
+    assert len(batched.cases) == 20
+    modes = [batched, run_sweep(spec, serial=True)]
+    if len(jax.devices()) > 1:
+        modes.append(run_sweep(spec, mode="sharded"))
+    reds = [
+        reduce_mean(r, by=("scheme", "S", "deadline"), x="sim_time",
+                    n_points=48)
+        for r in modes
+    ]
+    assert len(reds[0]) == 10
+    for key, r in reds[0].items():
+        assert r["n"] == 2
+        assert np.isfinite(r["mean"]).all(), key
+        for other in reds[1:]:
+            np.testing.assert_allclose(
+                r["mean"], other[key]["mean"], rtol=1e-5, atol=1e-5,
+                err_msg=f"tiers disagree on {key}",
+            )
+
+
+# -------------------------------------------------------------------------
 # time-axis reduction + tier agreement (acceptance criterion)
 # -------------------------------------------------------------------------
 
