@@ -9,6 +9,10 @@ against the committed ``benchmarks/baseline.json``:
 - a sweep's dispatch count may not exceed its baseline at all (dispatch
   counts are deterministic grid properties, so ANY growth is a batching
   regression, not noise);
+- a sweep's recorded peak RSS (``peak_rss_mb``, the process high-water
+  mark after the sweep) may not exceed ``threshold`` x its baseline —
+  the O(grid)-memory guarantee of the streaming-reduction layer
+  (DESIGN.md §12) is a gated property, not just a design note;
 - every baseline sweep must appear in the fresh file — dropping one from
   the Makefile's BENCH_SWEEPS would otherwise silently disable its
   coverage. Remove a sweep deliberately by refreshing the baseline.
@@ -49,30 +53,41 @@ def compare(current: dict, baseline: dict, threshold: float) -> int:
     cur, base = current["sweeps"], baseline["sweeps"]
     failures = 0
     print(f"{'sweep':24s} {'base_s':>8s} {'now_s':>8s} {'ratio':>6s} "
-          f"{'disp':>9s}  verdict")
+          f"{'disp':>9s} {'mem':>6s}  verdict")
     for name in sorted(set(cur) | set(base)):
         if name not in base:
             print(f"{name:24s} {'-':>8s} {cur[name]['wall_s']:8.2f} "
-                  f"{'-':>6s} {'-':>9s}  NEW (no baseline)")
+                  f"{'-':>6s} {'-':>9s} {'-':>6s}  NEW (no baseline)")
             continue
         if name not in cur:
             print(f"{name:24s} {base[name]['wall_s']:8.2f} {'-':>8s} "
-                  f"{'-':>6s} {'-':>9s}  FAIL not run (coverage dropped)")
+                  f"{'-':>6s} {'-':>9s} {'-':>6s}  "
+                  "FAIL not run (coverage dropped)")
             failures += 1
             continue
         b, c = base[name], cur[name]
         ratio = c["wall_s"] / max(b["wall_s"], 1e-9)
         disp = f"{b['dispatches']}->{c['dispatches']}"
+        # Peak-memory gate: skipped when either side predates the
+        # peak_rss_mb field (pre-§12 baselines), so old BENCH files keep
+        # comparing instead of erroring.
+        mem_ratio = None
+        if "peak_rss_mb" in b and "peak_rss_mb" in c:
+            mem_ratio = c["peak_rss_mb"] / max(b["peak_rss_mb"], 1e-9)
         bad_time = ratio > threshold
         bad_disp = c["dispatches"] > b["dispatches"]
+        bad_mem = mem_ratio is not None and mem_ratio > threshold
         verdict = "ok"
         if bad_time:
             verdict = f"FAIL wall-clock > {threshold:.2f}x baseline"
+        if bad_mem:
+            verdict = f"FAIL peak RSS > {threshold:.2f}x baseline"
         if bad_disp:
             verdict = "FAIL dispatch count grew (batching regression)"
-        failures += bad_time + bad_disp
+        failures += bad_time + bad_disp + bad_mem
+        mem = "-" if mem_ratio is None else f"{mem_ratio:.2f}"
         print(f"{name:24s} {b['wall_s']:8.2f} {c['wall_s']:8.2f} "
-              f"{ratio:6.2f} {disp:>9s}  {verdict}")
+              f"{ratio:6.2f} {disp:>9s} {mem:>6s}  {verdict}")
     return failures
 
 
@@ -90,17 +105,26 @@ def main(argv=None) -> int:
     ap.add_argument("--headroom", type=float, default=2.5,
                     help="--update: factor applied to measured wall_s "
                     "to absorb dev-box-vs-CI-runner speed (default 2.5)")
+    ap.add_argument("--mem-headroom", type=float, default=1.3,
+                    help="--update: factor applied to measured "
+                    "peak_rss_mb (default 1.3 — allocator jitter is far "
+                    "smaller than wall-clock jitter)")
     args = ap.parse_args(argv)
 
     if args.update:
         data = load(args.bench)
         for s in data["sweeps"].values():
             s["wall_s"] = round(s["wall_s"] * args.headroom, 3)
+            if "peak_rss_mb" in s:
+                s["peak_rss_mb"] = round(
+                    s["peak_rss_mb"] * args.mem_headroom, 1
+                )
         data["note"] = (
-            f"wall_s = measured x {args.headroom} headroom "
-            "(benchmarks.check --update); the 1.5x threshold applies on "
-            "top. dispatches/runs are exact grid properties: any "
-            "dispatch growth fails the gate regardless of hardware."
+            f"wall_s = measured x {args.headroom} headroom, peak_rss_mb "
+            f"= measured x {args.mem_headroom} (benchmarks.check "
+            "--update); the 1.5x threshold applies on top. "
+            "dispatches/runs are exact grid properties: any dispatch "
+            "growth fails the gate regardless of hardware."
         )
         with open(args.baseline, "w") as fh:
             json.dump(data, fh, indent=2, sort_keys=True)

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import os
+import resource
 import time
 from typing import Callable, List, Tuple
 
@@ -24,6 +25,16 @@ def setup(dataset: str, N: int = N_AGENTS, K: int = K_ECNS, seed: int = SEED):
     data = DATASETS[dataset](seed)
     problem = allocate(data, N, K)
     return net, problem
+
+
+def peak_rss_mb() -> float:
+    """Process peak resident set size in MiB (Linux ru_maxrss is KiB).
+
+    A high-water mark, monotone over the process lifetime — so per-sweep
+    readings in ``benchmarks.run`` attribute a regression to the first
+    sweep that hit the new peak, which is exactly what the check gate
+    needs (a later sweep re-reading the same peak adds no signal)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 def iters_to_accuracy(trace, target: float) -> float:

@@ -24,7 +24,7 @@ import json
 import sys
 import time
 
-from .common import Rows
+from .common import Rows, peak_rss_mb
 
 MODULES = ("fig3", "fig4", "fig5", "kernels")
 
@@ -63,6 +63,10 @@ def run_sweeps(names, rows: Rows, iters=None, runs=None, mode=None) -> dict:
             mode=result.mode,
             n_devices=result.n_devices,
             iters=result.cases[0].iters,
+            # Process high-water RSS after this sweep: monotone across
+            # sweeps, so the first sweep to raise it is the culprit of a
+            # memory regression (gated by benchmarks.check).
+            peak_rss_mb=round(peak_rss_mb(), 1),
         )
         summaries[spec.name] = summary
         rows.add(

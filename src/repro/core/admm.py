@@ -86,6 +86,18 @@ class Trace:
     final_x: np.ndarray  # (N, p, d)
     final_z: np.ndarray  # (p, d)
 
+    def reduce(self, spec) -> dict:
+        """Post-hoc streaming summaries of this trace (DESIGN.md §12).
+
+        ``spec`` is a `repro.methods.reductions.Reduction`; the result
+        matches what the drivers' in-scan fold would have produced for
+        the same run — the upgrade path from materialized to streaming
+        sweeps, and the reference the parity tests compare against.
+        """
+        from repro.methods.reductions import reduce_trace  # lazy: no cycle
+
+        return reduce_trace(spec, self)
+
 
 def make_schedule(
     cfg: ADMMConfig,

@@ -41,7 +41,7 @@ import numpy as np
 
 __all__ = ["TimingModel", "StragglerModel", "sample_times"]
 
-_RESPONSES = ("uniform", "shifted_exp")
+_RESPONSES = ("uniform", "shifted_exp", "lognormal", "pareto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +51,13 @@ class TimingModel:
     Every worker (ECN or agent) draws a base compute time — uniform
     U(base_lo, base_hi), or base_lo + Exp(mean=base_hi - base_lo) when
     ``response="shifted_exp"`` — multiplied by its speed-class factor.
+    The heavy-tailed fleet models share the same floor and *mean excess*
+    (base_hi - base_lo), so curves across response models compare at
+    equal average compute: ``"lognormal"`` draws the excess from a
+    mean-1 log-normal (sigma=1, mu=-1/2 — moderate tail, finite
+    variance) and ``"pareto"`` from a mean-1 Lomax (shape a=2 — the
+    edge-fleet regime with INFINITE variance, where a handful of workers
+    dominate every round and coding must pay off).
     In each iteration, each worker independently straggles with
     probability ``p_straggle``; stragglers add a delay ~ Exp(mean=delay).
     ``epsilon`` caps how long an uncoded agent will wait for its ECNs
@@ -77,7 +84,7 @@ class TimingModel:
     comm_hi: float = 1e-4
     # Heterogeneous fleet: worker w is speed_classes[w % len] x slower.
     speed_classes: Tuple[float, ...] = (1.0,)
-    response: str = "uniform"  # "uniform" | "shifted_exp"
+    response: str = "uniform"  # one of _RESPONSES
     # Decode deadline for partial-recovery codes (None = wait for R).
     deadline: Optional[float] = None
 
@@ -115,12 +122,20 @@ class TimingModel:
         contract: homogeneous-uniform draws are bit-identical to the
         original `StragglerModel`.
         """
+        scale = self.base_hi - self.base_lo
         if self.response == "uniform":
             base = rng.uniform(self.base_lo, self.base_hi, size=(iters, K))
-        else:  # shifted_exp: same support floor, exponential tail
-            base = self.base_lo + rng.exponential(
-                self.base_hi - self.base_lo, size=(iters, K)
+        elif self.response == "shifted_exp":
+            # Same support floor, exponential tail.
+            base = self.base_lo + rng.exponential(scale, size=(iters, K))
+        elif self.response == "lognormal":
+            # Mean-1 log-normal excess (mu = -sigma^2/2, sigma = 1), so
+            # E[base] matches shifted_exp at every scale.
+            base = self.base_lo + scale * rng.lognormal(
+                mean=-0.5, sigma=1.0, size=(iters, K)
             )
+        else:  # pareto: mean-1 Lomax (shape 2), infinite variance
+            base = self.base_lo + scale * rng.pareto(2.0, size=(iters, K))
         straggle = rng.random((iters, K)) < self.p_straggle
         extra = rng.exponential(self.delay, size=(iters, K))
         return base * self.speed_factors(K)[None, :] + straggle * extra

@@ -15,6 +15,8 @@ first-class objects (DESIGN.md §7):
   CSV emission compatible with `benchmarks.common.Rows`.
 """
 
+from repro.methods import Reduction, reduce_trace
+
 from .registry import SWEEPS, get_sweep
 from .results import emit_rows, mean_ci, reduce_mean, resample_runs, stack_field
 from .sweep import Case, SweepResult, SweepSpec, run_sweep
@@ -24,6 +26,8 @@ __all__ = [
     "SweepSpec",
     "SweepResult",
     "run_sweep",
+    "Reduction",
+    "reduce_trace",
     "SWEEPS",
     "get_sweep",
     "mean_ci",

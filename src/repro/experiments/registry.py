@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict
 
+from repro.methods import Reduction
+
 from .sweep import Case, SweepSpec
 
 __all__ = ["SWEEPS", "get_sweep"]
@@ -342,6 +344,52 @@ def hetero_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
     )
 
 
+def fleet_frontier(iters: int = 1000, runs: int = 1000) -> SweepSpec:
+    """Fleet-scale headline: heavy-tailed fleets x code family x S (§12).
+
+    The regime the streaming-reduction layer exists for: thousands of
+    independent straggler realizations (2 response tails x 3 code
+    families x 2 tolerances x ``runs`` seeds = 12 x runs grid points) at
+    agent populations where materializing per-iteration Traces would be
+    O(iters x runs) memory. The declared `Reduction` keeps everything
+    the frontier needs — accuracy/test-error at sim-time budgets,
+    time-to-accuracy targets, trajectory quantiles — in O(grid) memory,
+    so the default grid (12,000 runs) executes in a handful of sharded
+    dispatches under REPRO_SHARD_MEM_MB (EXPERIMENTS.md 'Fleet scale').
+    Lognormal vs Pareto base responses (finite vs infinite variance)
+    with a planted 4x speed class, against cyclic/MDS exact decoding and
+    the deadline-truncated approximate family (DESIGN.md §11).
+    """
+    return SweepSpec(
+        "fleet_frontier",
+        Case(
+            method="csI-ADMM", dataset="synthetic", K=6, M=360,
+            scheme="cyclic", c_tau=0.5, iters=iters,
+            p_straggle=0.3, delay=5e-3, speed_classes=(1.0, 1.0, 4.0),
+        ),
+        axes={
+            "response": ["lognormal", "pareto"],
+            "scheme": [
+                {"scheme": "cyclic"},
+                {"scheme": "mds"},
+                {"scheme": "approx", "deadline": 3e-4},
+            ],
+            "S": [1, 2],
+            "seed": list(range(runs)),
+        },
+        description="heavy-tailed fleet x code family x S, streaming "
+        "reductions at fleet scale",
+        x_axis="sim_time",
+        reductions=Reduction(
+            fields=("accuracy", "test_error"),
+            budgets=(0.25, 0.5, 1.0, 2.0),
+            x="sim_time",
+            targets=(0.5, 0.2, 0.1),
+            quantiles=(0.1, 0.5, 0.9),
+        ),
+    )
+
+
 SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig3_minibatch": fig3_minibatch,
     "fig3_baselines": fig3_baselines,
@@ -356,6 +404,7 @@ SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "compression_grid": compression_grid,
     "hetero_grid": hetero_grid,
     "mesh_scale": mesh_scale,
+    "fleet_frontier": fleet_frontier,
 }
 
 

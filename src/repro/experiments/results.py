@@ -38,11 +38,21 @@ def stack_field(traces: Sequence, field: str) -> np.ndarray:
     return np.stack([np.asarray(getattr(t, field)) for t in traces])
 
 
+def _as_float(values: np.ndarray) -> np.ndarray:
+    """Promote integer-typed metric arrays (e.g. a unit-count comm_cost)
+    to float64 so downstream mean/CI math never runs in integer
+    arithmetic; float inputs pass through untouched."""
+    values = np.asarray(values)
+    if not np.issubdtype(values.dtype, np.floating):
+        return values.astype(np.float64)
+    return values
+
+
 def mean_ci(
     values: np.ndarray, axis: int = 0, z: float = 1.96
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Mean and normal-approximation CI half-width along ``axis``."""
-    values = np.asarray(values)
+    values = _as_float(values)
     n = values.shape[axis]
     mean = values.mean(axis=axis)
     if n < 2:
@@ -67,17 +77,34 @@ def resample_runs(
     ``values`` is (R, n_points) where values[r, t] is the metric at the
     last iteration run r completed by grid[t] — a right-continuous step
     function. Before a run's first completion the first recorded metric
-    is held (the scan records no iteration-0 point).
+    is held (the scan records no iteration-0 point). Integer-typed
+    metrics are promoted to float (CI math downstream).
+
+    One batched pass instead of a per-run ``np.searchsorted`` loop: for
+    each value x[r, j] we find its insertion point into the SHARED grid
+    (the dual of searching each grid point into per-run xs — identical
+    comparisons, so the result is bit-identical to the loop), histogram
+    the insertion points per run with one offset `bincount`, and cumsum
+    into "iterations completed by grid[t]" counts.
     """
-    xs, ys = np.asarray(xs), np.asarray(ys)
+    xs, ys = np.asarray(xs), _as_float(ys)
     if xs.ndim != 2 or xs.shape != ys.shape:
         raise ValueError(f"xs/ys must be (R, iters), got {xs.shape}")
+    R, iters = xs.shape
     grid = np.linspace(0.0, xs[:, -1].min(), n_points)
-    out = np.empty((xs.shape[0], n_points), dtype=ys.dtype)
-    for r in range(xs.shape[0]):
-        idx = np.searchsorted(xs[r], grid, side="right") - 1
-        out[r] = ys[r][np.clip(idx, 0, xs.shape[1] - 1)]
-    return grid, out
+    # p[r, j] = #{t : grid[t] < xs[r, j]}; values past the grid end land
+    # in the extra slot n_points and never enter the cumsum below.
+    p = np.searchsorted(grid, xs.ravel(), side="left")
+    p += np.repeat(np.arange(R) * (n_points + 1), iters)
+    hist = np.bincount(p, minlength=R * (n_points + 1)).reshape(
+        R, n_points + 1
+    )
+    # counts[r, t] = #{j : xs[r, j] <= grid[t]} == the loop's
+    # searchsorted(xs[r], grid, "right"); -1 and clip = last completed
+    # iteration, held at the first record before any completion.
+    counts = np.cumsum(hist[:, :n_points], axis=1)
+    idx = np.clip(counts - 1, 0, iters - 1)
+    return grid, np.take_along_axis(ys, idx, axis=1)
 
 
 def reduce_mean(
@@ -99,11 +126,29 @@ def reduce_mean(
     Returns {key_tuple: {"mean": (P,), "ci": (P,), "n": int,
     "cases": [Case, ...][, "x": (P,) grid]}} with keys ordered by first
     appearance (P = iters, or n_points when resampled).
+
+    Streamed results (``result.reduced`` set, DESIGN.md §12) reduce the
+    pre-summarized grid arrays instead: ``field`` may be a full reduction
+    key ("accuracy/at_budget") or a plain metric name (mapped to
+    "{field}/final"), and ``x`` is ignored — budget/target axes are
+    declared in the `Reduction` spec, so there is nothing to resample.
     """
     groups: Dict[tuple, List[int]] = {}
     for i, c in enumerate(result.cases):
         key = tuple(getattr(c, f) for f in by)
         groups.setdefault(key, []).append(i)
+    reduced = getattr(result, "reduced", None)
+    if reduced is not None:
+        vals = _reduced_field(reduced, field)
+        out = {}
+        for key, idxs in groups.items():
+            entry = {
+                "n": len(idxs),
+                "cases": [result.cases[i] for i in idxs],
+            }
+            entry["mean"], entry["ci"] = mean_ci(vals[idxs], axis=0, z=z)
+            out[key] = entry
+        return out
     out: Dict[tuple, dict] = {}
     for key, idxs in groups.items():
         traces = [result.traces[i] for i in idxs]
@@ -117,6 +162,20 @@ def reduce_mean(
         entry["mean"], entry["ci"] = mean_ci(stacked, axis=0, z=z)
         out[key] = entry
     return out
+
+
+def _reduced_field(reduced: Dict[str, np.ndarray], field: str) -> np.ndarray:
+    """Resolve a field name against a streamed summary dict: exact key
+    first, then the metric's "/final" readout."""
+    if field in reduced:
+        return reduced[field]
+    final = f"{field}/final"
+    if final in reduced:
+        return reduced[final]
+    raise KeyError(
+        f"field {field!r} not in the streamed reduction; available: "
+        f"{sorted(reduced)}"
+    )
 
 
 def emit_rows(
@@ -142,11 +201,16 @@ def emit_rows(
         case = r["cases"][0]
         kv = ",".join(f"{f}={v}" for f, v in zip(by, key) if f != "method")
         name = f"{prefix}/{case.method}" + (f"[{kv}]" if kv else "")
+        # Streamed summaries may be scalar per run (a "/final" readout) or
+        # a budget/target vector; the derived column reads the last entry
+        # either way, matching the materialized path's final-grid-point
+        # convention.
+        mean, ci = np.atleast_1d(r["mean"]), np.atleast_1d(r["ci"])
         derived = (
-            f"final_{field}={r['mean'][-1]:.5f};ci={r['ci'][-1]:.5f};"
+            f"final_{field}={mean[-1]:.5f};ci={ci[-1]:.5f};"
             f"runs={r['n']}"
         )
-        if x is not None:
+        if x is not None and "x" in r:
             derived += f";{x}_budget={r['x'][-1]:.5g}"
         if extra:
             derived += "".join(f";{k}={v}" for k, v in extra.items())

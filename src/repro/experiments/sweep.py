@@ -23,9 +23,11 @@ import dataclasses
 import itertools
 import os
 import time
+import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.admm import ADMMConfig, Trace
 from repro.core.graph import Network, make_network
@@ -33,6 +35,7 @@ from repro.core.problems import DATASETS, LeastSquaresProblem, allocate
 from repro.core.timing import TimingModel
 from repro.methods import (
     KERNELS,
+    Reduction,
     get_kernel,
     run_batch,
     run_serial,
@@ -62,8 +65,17 @@ def _enable_compilation_cache() -> None:
             os.environ.get("REPRO_JAX_CACHE_DIR", ".jax_cache"),
         )
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
-    except Exception:
-        pass  # older jax without the knobs: compile per process as before
+    except Exception as exc:
+        # Older jax without the knobs: compile per process as before — but
+        # say so ONCE, so a cold-compile wall-clock regression in CI is
+        # explainable from the log instead of silent.
+        warnings.warn(
+            "persistent XLA compilation cache unavailable "
+            f"({type(exc).__name__}: {exc}); sweeps will compile per "
+            "process",
+            RuntimeWarning,
+            stacklevel=2,
+        )
 
 # Every registered method kernel is sweepable (DESIGN.md §8).
 METHODS = tuple(KERNELS)
@@ -163,6 +175,11 @@ class SweepSpec:
     # index, or a cumulative Trace field ("sim_time"/"comm_cost") that
     # `reduce_mean`/`emit_rows` resample runs onto (DESIGN.md §10).
     x_axis: Optional[str] = None
+    # Streaming in-scan reductions (DESIGN.md §12): when set, run_sweep
+    # folds these fixed-size summaries into the scan carry instead of
+    # materializing per-iteration Traces — memory O(grid), the fleet-
+    # scale path. None keeps the full-Trace default.
+    reductions: Optional[Reduction] = None
 
     def cases(self) -> List[Case]:
         names = list(self.axes)
@@ -193,6 +210,10 @@ class SweepResult:
     wall_s: float
     mode: str = "batched"  # resolved execution tier (DESIGN.md §9)
     n_devices: int = 1
+    # Streaming-sweep output (DESIGN.md §12): flat summary dict keyed
+    # "{field}/{stat}", each value a (n_cases, ...) array in grid order.
+    # Exactly one of ``traces`` / ``reduced`` is populated.
+    reduced: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def n_dispatches(self) -> int:
@@ -257,19 +278,29 @@ def _dispatch_group(
     nets: List[Network],
     probs: List[LeastSquaresProblem],
     mode: str,
-) -> List[Trace]:
-    """Registry lookup + the derived execution backend (DESIGN.md §8, §9)."""
+    reductions: Optional[Reduction] = None,
+):
+    """Registry lookup + the derived execution backend (DESIGN.md §8, §9).
+
+    Returns the group's per-run `Trace`s — or, with ``reductions``, one
+    dict of (group_size, ...) summary arrays (serial runs are stacked
+    host-side to the same shape)."""
     kernel = get_kernel(method)
     iters = cases[0].iters
     cfgs = [kernel.config(c) for c in cases]
     if mode == "serial":
-        return [
-            run_serial(kernel, p, n, cf, iters)
+        runs = [
+            run_serial(kernel, p, n, cf, iters, reductions=reductions)
             for p, n, cf in zip(probs, nets, cfgs)
         ]
+        if reductions is None:
+            return runs
+        return {k: np.stack([r[k] for r in runs]) for k in runs[0]}
     if mode == "sharded":
-        return run_sharded(kernel, probs, nets, cfgs, iters)
-    return run_batch(kernel, probs, nets, cfgs, iters)
+        return run_sharded(
+            kernel, probs, nets, cfgs, iters, reductions=reductions
+        )
+    return run_batch(kernel, probs, nets, cfgs, iters, reductions=reductions)
 
 
 def _resolve_mode(serial: bool, mode: Optional[str]) -> str:
@@ -296,6 +327,7 @@ def run_sweep(
     serial: bool = False,
     mode: Optional[str] = None,
     verbose: bool = False,
+    reductions: Optional[Reduction] = None,
 ) -> SweepResult:
     """Execute a sweep: one vmapped dispatch per static-signature group.
 
@@ -309,9 +341,16 @@ def run_sweep(
         axis, DESIGN.md §9), or "auto" (sharded iff >1 device is visible;
         the default, overridable via REPRO_SWEEP_MODE).
       verbose: print one line per dispatched group.
+      reductions: a `Reduction` to fold in-scan instead of materializing
+        Traces (DESIGN.md §12); defaults to the spec's own ``reductions``
+        declaration when a `SweepSpec` is passed. The result then carries
+        ``reduced`` (grid-shaped summary arrays) and an empty ``traces``.
 
-    Returns a `SweepResult` with traces in the original grid order.
+    Returns a `SweepResult` with traces (or reduced summaries) in the
+    original grid order.
     """
+    if reductions is None and isinstance(spec_or_cases, SweepSpec):
+        reductions = spec_or_cases.reductions
     cases = (
         spec_or_cases.cases()
         if isinstance(spec_or_cases, SweepSpec)
@@ -333,6 +372,7 @@ def run_sweep(
         groups.setdefault(_signature(case, prob), []).append(idx)
 
     traces: List[Optional[Trace]] = [None] * len(cases)
+    rows: List[Optional[dict]] = [None] * len(cases)
     group_meta: List[Tuple[tuple, int]] = []
     for sig, idxs in groups.items():
         gcases = [cases[i] for i in idxs]
@@ -342,12 +382,30 @@ def run_sweep(
             print(
                 f"[sweep] {sig[0]} group x{len(idxs)} ({mode}): {sig[1:]}"
             )
-        gtraces = _dispatch_group(
-            gcases[0].method, gcases, gnets, gprobs, mode
+        gout = _dispatch_group(
+            gcases[0].method, gcases, gnets, gprobs, mode,
+            reductions=reductions,
         )
-        for i, tr in zip(idxs, gtraces):
-            traces[i] = tr
+        if reductions is not None:
+            # Scatter the group's (group_size, ...) summary arrays back
+            # into grid order; stacked once below.
+            for j, i in enumerate(idxs):
+                rows[i] = {k: v[j] for k, v in gout.items()}
+        else:
+            for i, tr in zip(idxs, gout):
+                traces[i] = tr
         group_meta.append((sig, len(idxs)))
+
+    reduced = None
+    if reductions is not None:
+        keys = rows[0].keys()
+        if any(r.keys() != keys for r in rows[1:]):
+            raise ValueError(
+                "sweep groups produced different reduction keys; all "
+                "groups must share one Reduction spec"
+            )
+        reduced = {k: np.stack([r[k] for r in rows]) for k in keys}
+        traces = []
 
     return SweepResult(
         cases=cases,
@@ -356,4 +414,5 @@ def run_sweep(
         wall_s=time.perf_counter() - t0,
         mode=mode,
         n_devices=len(jax.devices()),
+        reduced=reduced,
     )

@@ -20,6 +20,7 @@ from .compression import CompressionRun
 from .driver import run_batch, run_serial, run_sharded
 from .gossip import DADMM, DGD, EXTRA, GossipRun
 from .privacy import PrivacyRun
+from .reductions import METRIC_FIELDS, Reduction, reduce_trace
 from .walkman import WalkmanADMM
 
 __all__ = [
@@ -31,6 +32,9 @@ __all__ = [
     "run_serial",
     "run_batch",
     "run_sharded",
+    "Reduction",
+    "reduce_trace",
+    "METRIC_FIELDS",
     "ADMMRun",
     "GossipRun",
     "PrivacyRun",

@@ -147,6 +147,14 @@ class IncrementalADMM(MethodKernel):
             ),
         )
 
+    def max_statics_bound(
+        self, problem: LeastSquaresProblem, run: ADMMRun, iters: int
+    ) -> dict:
+        # Exact: make_schedule's mu IS M_bar // K (no sampling involved),
+        # so chunked streaming execution shares one jit trace with the
+        # eager batched path.
+        return dict(MU=run.cfg.M_bar // run.cfg.K)
+
     def _statics(self, run: ADMMRun, problem, iters, sched) -> dict:
         return dict(
             name=self.name, iters=iters, P=sched["P"], K=run.cfg.K,

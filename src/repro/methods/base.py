@@ -107,6 +107,22 @@ class MethodKernel:
     ) -> Prepared:
         raise NotImplementedError
 
+    def max_statics_bound(
+        self, problem: LeastSquaresProblem, cfg, iters: int
+    ) -> Dict[str, int]:
+        """Exact bound on :attr:`Prepared.max_statics` WITHOUT preparing.
+
+        The streaming-reduction sharded path (DESIGN.md §12) prepares runs
+        lazily per memory chunk, so the global jit statics must be known
+        up front from (problem, cfg) alone — ``prepare()`` would cost the
+        very O(R x iters) host memory the path exists to avoid. Kernels
+        whose ``prepare`` emits ``max_statics`` must override this with a
+        value >= every run's prepared value (equal keys); the driver
+        verifies each chunk against it. Kernels with empty ``max_statics``
+        inherit this default.
+        """
+        return {}
+
     def setup(self, consts, statics):
         return consts
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import os
 from functools import lru_cache
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ from repro.core.problems import LeastSquaresProblem
 from repro.distributed.sharding import AxisLayout, batch_specs
 
 from .base import MethodKernel, Prepared
+from .reductions import Reduction
 
 __all__ = ["run_serial", "run_batch", "run_sharded"]
 
@@ -63,6 +64,53 @@ def _compose(kernel: MethodKernel, statics_key: tuple):
     return run
 
 
+def _compose_reduced(
+    kernel: MethodKernel, statics_key: tuple, spec: Reduction
+):
+    """setup -> init -> scan(step + reduction fold) -> finalize (§12).
+
+    Same step function as `_compose`, but the per-iteration metrics feed
+    a fixed-size `Reduction` carry instead of being stacked as scan
+    outputs, and the cumulative sim_time/comm_cost clock rides along as
+    the LAST per-step input (increments appended by `_clock_steps`, so
+    kernels' positional ``inp`` indices are untouched by the ``[:-1]``
+    slice). Output is the flat summary dict — O(spec), not O(iters).
+    """
+    statics = dict(statics_key)
+
+    def run(consts, steps):
+        aux = kernel.setup(consts, statics)
+        state = kernel.init(aux, statics)
+        red0 = spec.init_carry(steps[-1].dtype)
+
+        def body(carry, inp):
+            s, red = carry
+            s, metrics = kernel.step(s, inp[:-1], aux, statics)
+            return (s, spec.update_carry(red, metrics, inp[-1])), None
+
+        (state, red), _ = jax.lax.scan(body, (state, red0), steps)
+        out = spec.finalize_carry(red)
+        if spec.final_x:
+            out["final_x"], out["final_z"] = kernel.final(
+                state, aux, statics
+            )
+        return out
+
+    return run
+
+
+def _clock_steps(prep: Prepared) -> np.ndarray:
+    """(iters, 2) per-step [d_sim_time, d_comm] increments of the host
+    clocks, ordered as `repro.methods.reductions.CLOCK_AXES`."""
+    return np.stack(
+        [
+            np.diff(prep.sim_time, prepend=0.0),
+            np.diff(np.asarray(prep.comm, dtype=np.float64), prepend=0.0),
+        ],
+        axis=1,
+    )
+
+
 @lru_cache(maxsize=None)
 def _serial_fn(kernel: MethodKernel, statics_key: tuple):
     return jax.jit(_compose(kernel, statics_key))
@@ -71,6 +119,20 @@ def _serial_fn(kernel: MethodKernel, statics_key: tuple):
 @lru_cache(maxsize=None)
 def _batch_fn(kernel: MethodKernel, statics_key: tuple):
     return jax.jit(jax.vmap(_compose(kernel, statics_key)))
+
+
+@lru_cache(maxsize=None)
+def _serial_reduced_fn(
+    kernel: MethodKernel, statics_key: tuple, spec: Reduction
+):
+    return jax.jit(_compose_reduced(kernel, statics_key, spec))
+
+
+@lru_cache(maxsize=None)
+def _batch_reduced_fn(
+    kernel: MethodKernel, statics_key: tuple, spec: Reduction
+):
+    return jax.jit(jax.vmap(_compose_reduced(kernel, statics_key, spec)))
 
 
 def _to_trace(prep: Prepared, x, z, metrics) -> Trace:
@@ -92,14 +154,25 @@ def run_serial(
     net: Network,
     cfg,
     iters: int,
-) -> Trace:
-    """One run: jitted ``lax.scan`` of the kernel's step function."""
+    reductions: Optional[Reduction] = None,
+):
+    """One run: jitted ``lax.scan`` of the kernel's step function.
+
+    Returns a full `Trace`, or — with ``reductions`` — the run's flat
+    summary dict of numpy arrays (DESIGN.md §12).
+    """
     prep = kernel.prepare(problem, net, cfg, iters)
     statics = {**prep.statics, **prep.max_statics}
+    consts = tuple(jnp.asarray(c) for c in prep.consts)
+    if reductions is not None:
+        fn = _serial_reduced_fn(kernel, _statics_key(statics), reductions)
+        steps = tuple(jnp.asarray(s) for s in prep.steps) + (
+            jnp.asarray(_clock_steps(prep)),
+        )
+        return {k: np.asarray(v) for k, v in fn(consts, steps).items()}
     fn = _serial_fn(kernel, _statics_key(statics))
     x, z, metrics = fn(
-        tuple(jnp.asarray(c) for c in prep.consts),
-        tuple(jnp.asarray(s) for s in prep.steps),
+        consts, tuple(jnp.asarray(s) for s in prep.steps)
     )
     return _to_trace(prep, x, z, metrics)
 
@@ -168,11 +241,24 @@ def run_batch(
     nets: Sequence[Network],
     cfgs: Sequence,
     iters: int,
-) -> List[Trace]:
-    """R runs as ONE vmapped scan — one jit trace, one device dispatch."""
+    reductions: Optional[Reduction] = None,
+):
+    """R runs as ONE vmapped scan — one jit trace, one device dispatch.
+
+    Returns per-run `Trace`s, or — with ``reductions`` — one dict of
+    numpy arrays with a leading runs axis (DESIGN.md §12).
+    """
     preps, statics, consts, steps = _stack_batch(
         kernel, problems, nets, cfgs, iters
     )
+    if reductions is not None:
+        fn = _batch_reduced_fn(kernel, _statics_key(statics), reductions)
+        out = fn(
+            tuple(jnp.asarray(c) for c in consts),
+            tuple(jnp.asarray(s) for s in steps)
+            + (jnp.asarray(np.stack([_clock_steps(p) for p in preps])),),
+        )
+        return {k: np.asarray(v) for k, v in out.items()}
     fn = _batch_fn(kernel, _statics_key(statics))
     x, z, metrics = fn(
         tuple(jnp.asarray(c) for c in consts),
@@ -238,6 +324,37 @@ def _sharded_fn(
     return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
 
 
+@lru_cache(maxsize=None)
+def _sharded_reduced_fn(
+    kernel: MethodKernel,
+    statics_key: tuple,
+    spec: Reduction,
+    D: int,
+    n_consts: int,
+    n_steps: int,
+    donate: bool,
+):
+    """jit(shard_map(vmap(compose_reduced))) — the streaming sharded tier.
+
+    Same mesh/shard_map rationale as `_sharded_fn`; the single bare
+    ``P("runs")`` out_spec applies as a prefix to every leaf of the
+    summary dict (each leaf has a leading vmapped runs axis)."""
+    mesh = _runs_mesh()
+    assert mesh.devices.shape[0] == D
+    in_spec = (
+        tuple(P("runs") for _ in range(n_consts)),
+        tuple(P("runs") for _ in range(n_steps + 1)),  # +1: clock steps
+    )
+    fn = shard_map(
+        jax.vmap(_compose_reduced(kernel, statics_key, spec)),
+        mesh=mesh,
+        in_specs=in_spec,
+        out_specs=P("runs"),
+        check_rep=False,
+    )
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
 def _bytes_per_run(
     consts, steps, statics: dict, preps: List[Prepared]
 ) -> int:
@@ -262,13 +379,141 @@ def _chunk_runs(R_pad: int, D: int, per_run_bytes: int) -> int:
     return min(chunk, R_pad)
 
 
+def _run_reduced_chunked(
+    kernel: MethodKernel,
+    problems: Sequence[LeastSquaresProblem],
+    nets: Sequence[Network],
+    cfgs: Sequence,
+    iters: int,
+    spec: Reduction,
+) -> Dict[str, np.ndarray]:
+    """Streaming sharded execution with LAZY per-chunk prepare (§12).
+
+    The eager path prepares and stacks all R runs before dispatching —
+    host memory O(R x iters) even though the device outputs are O(R).
+    Here runs are prepared only when their chunk dispatches, so peak host
+    memory is O(chunk x iters) + O(R x spec): the chunk size shrinks as
+    per-run schedules grow (`_chunk_runs` on the prepared bytes of run
+    0), which is what keeps fleet-scale RSS flat in ``iters``
+    (EXPERIMENTS.md 'Fleet scale'). Requires the kernel's
+    `max_statics_bound` to be exact enough that every chunk reconciles
+    under ONE set of jit statics — one trace, one executable, chunk
+    count dispatches.
+    """
+    D = len(jax.devices())
+    sigs = {
+        kernel.static_signature(p, c, iters)
+        for p, c in zip(problems, cfgs)
+    }
+    if len(sigs) != 1:
+        raise ValueError(
+            f"batch mixes {len(sigs)} static signatures; group runs by "
+            f"{kernel.name} static_signature() first"
+        )
+    bound: Dict[str, int] = {}
+    for p, c in zip(problems, cfgs):
+        for key, val in kernel.max_statics_bound(p, c, iters).items():
+            bound[key] = max(bound.get(key, 0), int(val))
+
+    # One probe prepare: fixes the shared statics and sizes the chunks.
+    prep0 = kernel.prepare(problems[0], nets[0], cfgs[0], iters)
+    if set(prep0.max_statics) != set(bound):
+        raise ValueError(
+            f"{kernel.name}.max_statics_bound() keys {sorted(bound)} != "
+            f"prepared max_statics keys {sorted(prep0.max_statics)}; "
+            "implement the bound hook for chunked streaming execution"
+        )
+    statics = {**prep0.statics, **bound}
+    per_run = (
+        sum(np.asarray(a).nbytes for a in prep0.consts + prep0.steps)
+        + _clock_steps(prep0).nbytes
+    )
+    R = len(problems)
+    mesh = _runs_mesh()
+    layout = AxisLayout(mesh, data=("runs",), model="model")
+    donate = jax.default_backend() in ("tpu", "gpu")
+    del prep0  # the probe's schedules are re-prepared with its chunk
+
+    chunk = _chunk_runs(-(-R // D) * D, D, max(per_run, 1))
+    fn = None
+    outs: List[Dict[str, np.ndarray]] = []
+    for lo in range(0, R, chunk):
+        hi = min(lo + chunk, R)
+        preps = [
+            kernel.prepare(p, n, c, iters)
+            for p, n, c in zip(
+                problems[lo:hi], nets[lo:hi], cfgs[lo:hi]
+            )
+        ]
+        for pr in preps:
+            if pr.statics != _shared_statics(statics, pr):
+                raise ValueError(
+                    "equal signatures produced unequal statics"
+                )
+            for key, val in pr.max_statics.items():
+                if int(val) > statics[key]:
+                    raise ValueError(
+                        f"{kernel.name}.max_statics_bound() under-bounds "
+                        f"{key}: prepared {val} > bound {statics[key]}"
+                    )
+        n = hi - lo
+        csl = tuple(
+            np.stack([np.asarray(pr.consts[i]) for pr in preps])
+            for i in range(len(preps[0].consts))
+        )
+        ssl = tuple(
+            np.stack([np.asarray(pr.steps[i]) for pr in preps])
+            for i in range(len(preps[0].steps))
+        ) + (np.stack([_clock_steps(pr) for pr in preps]),)
+        del preps
+        if fn is None:
+            fn = _sharded_reduced_fn(
+                kernel, _statics_key(statics), spec, D,
+                len(csl), len(ssl) - 1, donate,
+            )
+        pad = -(-n // D) * D - n
+        if pad:  # repeat the last run; its outputs are sliced off below
+            csl = tuple(
+                np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                for a in csl
+            )
+            ssl = tuple(
+                np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                for a in ssl
+            )
+        cspec, sspec = batch_specs((csl, ssl), layout)
+        put_c = tuple(
+            jax.device_put(a, NamedSharding(mesh, s))
+            for a, s in zip(csl, cspec)
+        )
+        put_s = tuple(
+            jax.device_put(a, NamedSharding(mesh, s))
+            for a, s in zip(ssl, sspec)
+        )
+        del csl, ssl  # the chunk's host copies die before the next one
+        out = fn(put_c, put_s)
+        outs.append({k: np.asarray(v)[:n] for k, v in out.items()})
+    return {
+        k: np.concatenate([o[k] for o in outs]) for k in outs[0]
+    }
+
+
+def _shared_statics(statics: dict, prep: Prepared) -> dict:
+    """The statics a chunked run must agree on: everything but the
+    max-reconciled keys (whose runtime values legitimately differ)."""
+    return {
+        k: v for k, v in statics.items() if k not in prep.max_statics
+    }
+
+
 def run_sharded(
     kernel: MethodKernel,
     problems: Sequence[LeastSquaresProblem],
     nets: Sequence[Network],
     cfgs: Sequence,
     iters: int,
-) -> List[Trace]:
+    reductions: Optional[Reduction] = None,
+):
     """R runs vmapped AND laid out over a device mesh on the runs axis.
 
     The computation is literally `run_batch`'s vmapped scan, wrapped in
@@ -283,13 +528,28 @@ def run_sharded(
     accelerator backends (XLA does not implement donation on CPU).
     Bitwise equal to `run_batch` because no op crosses the runs axis;
     with a single visible device it degrades to exactly `run_batch`.
+
+    With ``reductions`` set, execution routes to `_run_reduced_chunked`:
+    the same mesh layout, but runs are prepared lazily per chunk and the
+    scan emits fixed-size streaming summaries instead of a full `Trace`
+    (DESIGN.md §12) — the return value is one dict of (R, ...) numpy
+    arrays. The bitwise claim above is for the Trace path; the in-scan
+    fold fuses with the kernel math, so streaming summaries agree with
+    `run_batch` to last-ulp tolerance rather than bit-for-bit (XLA
+    fusion choices move with the per-device vmap batch size).
     """
     D = len(jax.devices())
     if D == 1 or len(problems) == 1:
         # Structural fallback: one device means nothing to lay out; one
         # run means padding would make every device compute a duplicate
         # of the same scan for no wall-clock gain.
-        return run_batch(kernel, problems, nets, cfgs, iters)
+        return run_batch(
+            kernel, problems, nets, cfgs, iters, reductions=reductions
+        )
+    if reductions is not None:
+        return _run_reduced_chunked(
+            kernel, problems, nets, cfgs, iters, reductions
+        )
 
     preps, statics, consts, steps = _stack_batch(
         kernel, problems, nets, cfgs, iters

@@ -1,0 +1,276 @@
+"""Streaming in-scan reductions: O(grid) sweep memory (DESIGN.md §12).
+
+A full `repro.core.admm.Trace` materializes every per-iteration metric —
+memory O(iters x runs) — which caps sweep grids at tens of runs. The
+paper's claims, however, are *statistical*: accuracy at a time budget,
+time to reach an accuracy target, quantiles over straggler realizations.
+A `Reduction` declares exactly those summaries, and the drivers fold
+them into the ``lax.scan`` carry so a run's footprint is a fixed-size
+pytree regardless of ``iters``:
+
+- **running mean/M2** (Welford) of each metric over iterations — the
+  trajectory average plus the variance the CI math needs;
+- **running min** and **final value** of each metric;
+- **accuracy-at-budget**: per-run budget-crossing detection against the
+  cumulative ``sim_time``/``comm_cost`` clock carried through the scan
+  (the same right-continuous step semantics as
+  `repro.experiments.results.resample_runs`);
+- **time-to-target**: first cumulative clock value at which the metric
+  reaches each target (+inf when never);
+- **streaming quantiles**: a fixed-bin histogram sketch as scan state,
+  collapsed to quantile estimates at ``finalize``.
+
+Everything is computed in-jit with no host round-trips; the only outputs
+that leave the device are the fixed-size summaries. `reduce_trace` is
+the numpy post-hoc reference — applying it to a materialized `Trace`
+must match the in-scan fold to <= 1e-5 (property-tested in
+``tests/test_reductions_properties.py``), which is what licenses the
+fleet-scale sweeps to drop the Trace entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Reduction", "METRIC_FIELDS", "CLOCK_AXES", "reduce_trace"]
+
+# Per-step metric tuple emitted by every MethodKernel.step, in order.
+METRIC_FIELDS = ("accuracy", "test_error", "z_err")
+# Cumulative clocks carried through the scan: index into the (2,) carry.
+CLOCK_AXES = ("sim_time", "comm_cost")
+
+
+@dataclasses.dataclass(frozen=True)
+class Reduction:
+    """Declarative spec of the in-scan summaries (hashable: jit cache key).
+
+    Attributes:
+      fields: metric fields to reduce (subset of `METRIC_FIELDS`). Every
+        field always gets final/mean/var/min summaries.
+      budgets: cumulative-``x`` budgets; each field additionally reports
+        its value at the last iteration completed within each budget
+        (held at the first recorded value when no iteration completes —
+        the `resample_runs` step-function convention).
+      x: the budget/time axis — "sim_time" or "comm_cost".
+      targets: metric thresholds; each field additionally reports the
+        first cumulative ``x`` at which it reached each target (+inf
+        when never — `time_to_accuracy` for field="accuracy").
+      quantiles: quantile levels in (0, 1]; estimated from a fixed-bin
+        histogram of the metric over iterations (``bins`` bins spanning
+        [lo, hi], out-of-range values clipped into the edge bins).
+      bins, lo, hi: the histogram sketch geometry.
+      final_x: also return the per-run final iterates (N, p, d)/(p, d)
+        — O(model) per run, off by default.
+    """
+
+    fields: Tuple[str, ...] = ("accuracy",)
+    budgets: Tuple[float, ...] = ()
+    x: str = "sim_time"
+    targets: Tuple[float, ...] = ()
+    quantiles: Tuple[float, ...] = ()
+    bins: int = 64
+    lo: float = 0.0
+    hi: float = 1.5
+    final_x: bool = False
+
+    def __post_init__(self) -> None:
+        unknown = set(self.fields) - set(METRIC_FIELDS)
+        if not self.fields or unknown:
+            raise ValueError(
+                f"fields must be a non-empty subset of {METRIC_FIELDS}, "
+                f"got {self.fields}"
+            )
+        if self.x not in CLOCK_AXES:
+            raise ValueError(
+                f"unknown reduction axis {self.x!r}; known: {CLOCK_AXES}"
+            )
+        if any(b <= 0 for b in self.budgets):
+            raise ValueError(f"budgets must be positive, got {self.budgets}")
+        if any(not 0.0 < q <= 1.0 for q in self.quantiles):
+            raise ValueError(
+                f"quantiles must lie in (0, 1], got {self.quantiles}"
+            )
+        if self.quantiles and (self.bins < 1 or self.hi <= self.lo):
+            raise ValueError(
+                f"histogram sketch needs bins >= 1 and hi > lo, got "
+                f"bins={self.bins}, [{self.lo}, {self.hi})"
+            )
+
+    @property
+    def axis_index(self) -> int:
+        return CLOCK_AXES.index(self.x)
+
+    def keys(self) -> Tuple[str, ...]:
+        """Output keys, in emission order (clock finals, then per-field)."""
+        out = [f"{ax}/final" for ax in CLOCK_AXES]
+        for f in self.fields:
+            out += [f"{f}/final", f"{f}/mean", f"{f}/var", f"{f}/min"]
+            if self.budgets:
+                out.append(f"{f}/at_budget")
+            if self.targets:
+                out.append(f"{f}/time_to")
+            if self.quantiles:
+                out.append(f"{f}/quantiles")
+        if self.final_x:
+            out += ["final_x", "final_z"]
+        return tuple(out)
+
+    # -- in-scan fold (pure jax, called from the driver's scan body) -------
+
+    def init_carry(self, dtype) -> dict:
+        """Fixed-size reduction carry: O(budgets+targets+bins), not O(iters)."""
+        carry = {
+            "k": jnp.zeros((), jnp.int32),
+            "clock": jnp.zeros((len(CLOCK_AXES),), dtype),
+        }
+        for f in self.fields:
+            st = {
+                "last": jnp.zeros((), dtype),
+                "mean": jnp.zeros((), dtype),
+                "m2": jnp.zeros((), dtype),
+                "min": jnp.full((), jnp.inf, dtype),
+            }
+            if self.budgets:
+                st["at_budget"] = jnp.zeros((len(self.budgets),), dtype)
+            if self.targets:
+                st["time_to"] = jnp.full((len(self.targets),), jnp.inf, dtype)
+            if self.quantiles:
+                st["hist"] = jnp.zeros((self.bins,), dtype)
+            carry[f] = st
+        return carry
+
+    def update_carry(self, carry: dict, metrics, dclock) -> dict:
+        """Fold one iteration's (acc, test_err, z_err) + clock increments."""
+        vals = dict(zip(METRIC_FIELDS, metrics))
+        k = carry["k"]
+        dtype = carry["clock"].dtype
+        clock = carry["clock"] + jnp.asarray(dclock, dtype)
+        x = clock[self.axis_index]
+        first = k == 0
+        new = {"k": k + 1, "clock": clock}
+        for f in self.fields:
+            # Cast into the carry dtype: the scan carry must keep a stable
+            # dtype even when a kernel emits narrower metrics.
+            st, m = carry[f], jnp.asarray(vals[f], dtype)
+            # Welford over iterations: mean + M2 in one pass.
+            kf = (k + 1).astype(m.dtype)
+            delta = m - st["mean"]
+            mean = st["mean"] + delta / kf
+            out = {
+                "last": m,
+                "mean": mean,
+                "m2": st["m2"] + delta * (m - mean),
+                "min": jnp.minimum(st["min"], m),
+            }
+            if self.budgets:
+                B = jnp.asarray(self.budgets, m.dtype)
+                # value at the LAST iteration completed within each budget;
+                # the first iteration seeds every budget (hold-first, the
+                # resample_runs convention for runs that start past B).
+                out["at_budget"] = jnp.where(
+                    (x <= B) | first, m, st["at_budget"]
+                )
+            if self.targets:
+                tg = jnp.asarray(self.targets, m.dtype)
+                out["time_to"] = jnp.where(
+                    (m <= tg) & jnp.isinf(st["time_to"]), x, st["time_to"]
+                )
+            if self.quantiles:
+                idx = _bin_index(self, m)
+                out["hist"] = st["hist"].at[idx].add(1)
+            new[f] = out
+        return new
+
+    def finalize_carry(self, carry: dict) -> Dict[str, jnp.ndarray]:
+        """Collapse the carry to the flat output dict (still in-jit)."""
+        out = {}
+        for i, ax in enumerate(CLOCK_AXES):
+            out[f"{ax}/final"] = carry["clock"][i]
+        k = carry["k"]
+        for f in self.fields:
+            st = carry[f]
+            out[f"{f}/final"] = st["last"]
+            out[f"{f}/mean"] = st["mean"]
+            out[f"{f}/var"] = st["m2"] / jnp.maximum(k - 1, 1).astype(
+                st["m2"].dtype
+            )
+            out[f"{f}/min"] = st["min"]
+            if self.budgets:
+                out[f"{f}/at_budget"] = st["at_budget"]
+            if self.targets:
+                out[f"{f}/time_to"] = st["time_to"]
+            if self.quantiles:
+                cdf = jnp.cumsum(st["hist"])
+                q = jnp.asarray(self.quantiles, cdf.dtype)
+                idx = jnp.clip(
+                    jnp.searchsorted(cdf, q * k.astype(cdf.dtype)),
+                    0, self.bins - 1,
+                )
+                out[f"{f}/quantiles"] = self.lo + (
+                    idx.astype(cdf.dtype) + 0.5
+                ) * (self.hi - self.lo) / self.bins
+        return out
+
+
+def _bin_index(spec: Reduction, m):
+    """Histogram bin of a metric value, edge-clipped (jnp and numpy agree)."""
+    scaled = jnp.floor(
+        (m - spec.lo) / (spec.hi - spec.lo) * spec.bins
+    )
+    return jnp.clip(scaled, 0, spec.bins - 1).astype(jnp.int32)
+
+
+def reduce_trace(spec: Reduction, trace) -> Dict[str, np.ndarray]:
+    """Post-hoc reference: apply ``spec`` to a materialized `Trace`.
+
+    The correctness contract of the streaming layer: for every kernel and
+    execution tier, the in-scan fold equals this numpy reduction of the
+    full per-iteration record to <= 1e-5. Also the upgrade path for old
+    materialized sweeps — reduce once, then compare against streaming
+    runs at fleet scale.
+    """
+    clocks = {
+        "sim_time": np.asarray(trace.sim_time, dtype=np.float64),
+        "comm_cost": np.asarray(trace.comm_cost, dtype=np.float64),
+    }
+    x = clocks[spec.x]
+    out: Dict[str, np.ndarray] = {
+        f"{ax}/final": clocks[ax][-1] for ax in CLOCK_AXES
+    }
+    for f in spec.fields:
+        ys = np.asarray(getattr(trace, f), dtype=np.float64)
+        n = len(ys)
+        out[f"{f}/final"] = ys[-1]
+        out[f"{f}/mean"] = ys.mean()
+        out[f"{f}/var"] = ys.var(ddof=1) if n > 1 else np.float64(0.0)
+        out[f"{f}/min"] = ys.min()
+        if spec.budgets:
+            idx = np.searchsorted(x, np.asarray(spec.budgets), "right") - 1
+            out[f"{f}/at_budget"] = ys[np.clip(idx, 0, n - 1)]
+        if spec.targets:
+            t2t = np.full(len(spec.targets), np.inf)
+            for j, tg in enumerate(spec.targets):
+                hit = np.nonzero(ys <= tg)[0]
+                if len(hit):
+                    t2t[j] = x[hit[0]]
+            out[f"{f}/time_to"] = t2t
+        if spec.quantiles:
+            bins = np.clip(
+                np.floor((ys - spec.lo) / (spec.hi - spec.lo) * spec.bins),
+                0, spec.bins - 1,
+            ).astype(int)
+            hist = np.bincount(bins, minlength=spec.bins).astype(np.float64)
+            cdf = np.cumsum(hist)
+            q = np.asarray(spec.quantiles, dtype=np.float64)
+            idx = np.clip(np.searchsorted(cdf, q * n), 0, spec.bins - 1)
+            out[f"{f}/quantiles"] = spec.lo + (idx + 0.5) * (
+                spec.hi - spec.lo
+            ) / spec.bins
+    if spec.final_x:
+        out["final_x"] = np.asarray(trace.final_x)
+        out["final_z"] = np.asarray(trace.final_z)
+    return {k: np.asarray(v) for k, v in out.items()}

@@ -211,6 +211,7 @@ EXPECTED_GRIDS = {
     "compression_grid": (9, 3),  # one trace per compressor static
     "hetero_grid": (15, 1),  # speed classes are host-side clock only
     "mesh_scale": (3, 1),  # S=0 schemes merge; S/scheme are runtime
+    "fleet_frontier": (12, 1),  # response/scheme/deadline/S all runtime
 }
 
 

@@ -1,0 +1,110 @@
+"""Hypothesis property test: in-scan reductions == post-hoc Trace math.
+
+The licensing property of the streaming layer (DESIGN.md §12): for ANY
+`Reduction` spec, method kernel, execution tier, and cost axis, folding
+the summaries into the ``lax.scan`` carry matches `reduce_trace` applied
+to the materialized `Trace` of the same run to <= 1e-5. Hypothesis draws
+the spec (budgets, targets, sketch geometry) and the kernel; each
+example runs both paths on the same seed.
+
+Kept separate from ``test_reductions.py`` so the deterministic tests run
+even when ``hypothesis`` is absent (optional dev dependency, see
+``requirements-dev.txt``).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import make_network
+from repro.core.problems import DATASETS, allocate
+from repro.experiments import Case
+from repro.methods import Reduction, get_kernel, run_batch, run_serial
+
+ITERS = 12
+
+# One method per driver family: coded incremental ADMM (Pallas update,
+# masked mu gather), walk ADMM (no ECN layer), and a gossip baseline
+# (all-agents rounds) — the three distinct step/clock structures.
+METHODS = ("csI-ADMM", "W-ADMM", "DGD")
+
+
+def _case(method: str, seed: int) -> Case:
+    coded = method == "csI-ADMM"
+    return Case(
+        method=method, dataset="usps", N=5, K=6, M=36, iters=ITERS,
+        seed=seed % 5,
+        S=1 + seed % 2 if coded else 0,
+        scheme="cyclic" if coded else "uncoded",
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_property_streaming_matches_trace_reduction(data):
+    method = data.draw(st.sampled_from(METHODS))
+    seed = data.draw(st.integers(0, 2**16))
+    spec = Reduction(
+        fields=tuple(
+            data.draw(
+                st.sets(
+                    st.sampled_from(("accuracy", "test_error", "z_err")),
+                    min_size=1,
+                )
+            )
+        ),
+        x=data.draw(st.sampled_from(("sim_time", "comm_cost"))),
+        budgets=tuple(
+            data.draw(
+                st.lists(
+                    st.floats(1e-4, 10.0, allow_nan=False), max_size=3
+                )
+            )
+        ),
+        targets=tuple(
+            data.draw(
+                st.lists(
+                    st.floats(0.01, 1.0, allow_nan=False), max_size=3
+                )
+            )
+        ),
+        quantiles=tuple(
+            data.draw(
+                st.lists(
+                    st.floats(0.05, 1.0, allow_nan=False), max_size=3
+                )
+            )
+        ),
+        bins=data.draw(st.integers(2, 64)),
+        lo=0.0,
+        hi=data.draw(st.floats(0.5, 2.0)),
+        final_x=data.draw(st.booleans()),
+    )
+    batched = data.draw(st.booleans())
+
+    case = _case(method, seed)
+    kernel = get_kernel(method)
+    net = make_network(case.N, 0.5, seed=case.seed)
+    prob = allocate(DATASETS[case.dataset](case.seed), case.N, case.K)
+    cfg = kernel.config(case)
+
+    trace = run_serial(kernel, prob, net, cfg, ITERS)
+    ref = trace.reduce(spec)
+    if batched:
+        out2 = run_batch(
+            kernel, [prob] * 2, [net] * 2, [cfg] * 2, ITERS,
+            reductions=spec,
+        )
+        got = {k: v[1] for k, v in out2.items()}
+    else:
+        got = run_serial(kernel, prob, net, cfg, ITERS, reductions=spec)
+
+    assert set(got) == set(ref) == set(spec.keys())
+    for k in ref:
+        np.testing.assert_allclose(
+            got[k], ref[k], rtol=1e-5, atol=1e-5,
+            err_msg=f"{method} seed={seed} key={k}",
+        )
