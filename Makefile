@@ -2,7 +2,7 @@ PY := PYTHONPATH=src python
 
 # Sweeps timed by the benchmark-in-CI gate (BENCH_ci.json vs
 # benchmarks/baseline.json); keep in sync with benchmarks/baseline.json.
-BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid,code_frontier,fleet_frontier
+BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid,code_frontier,fleet_frontier,staleness_frontier,churn_grid
 BENCH_JSON := BENCH_ci.json
 
 # Coverage floor the CI matrix enforces on the coding + kernel layers

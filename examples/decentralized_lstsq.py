@@ -20,7 +20,7 @@ from repro.core.admm import ADMMConfig, run_incremental_admm
 from repro.core.baselines import run_dadmm, run_dgd, run_extra, run_wadmm
 from repro.core.graph import make_network
 from repro.core.problems import DATASETS, allocate
-from repro.core.straggler import StragglerModel
+from repro.core.timing import StragglerModel
 
 N, K, ITERS, TARGET = 10, 3, 1200, 0.15
 

@@ -11,7 +11,7 @@ exactly the Fig. 2 construction.
 from repro.core.admm import ADMMConfig, run_incremental_admm
 from repro.core.graph import make_network
 from repro.core.problems import make_synthetic, allocate
-from repro.core.straggler import StragglerModel
+from repro.core.timing import StragglerModel
 
 # 1. A connected network of 10 agents (Hamiltonian cycle exists).
 net = make_network(N=10, connectivity=0.5, seed=0)

@@ -111,6 +111,21 @@ def make_schedule(
 
     Returns dict of numpy arrays consumed by the jitted scan + the
     time/communication accounting.
+
+    With churn enabled on the timing model (DESIGN.md §13), ECNs and
+    agents crash/recover as an alternating-renewal process sampled on
+    the churn-free clock (seed stream [6, seed]; ECN draws before agent
+    draws is part of the seed contract). Crashed ECNs never respond —
+    their times are censored to +inf BEFORE the response/decode logic,
+    so they are excluded from the alive mask and the per-pattern decode
+    exactly like deadline-missing stragglers. Iterations whose surviving
+    responses cannot be decoded (pattern below ``min_responses`` or
+    outside the code family's decodable set) and iterations whose active
+    agent is down are *skipped activations*: ``act = 0``, zero decode
+    weights, and the token hop still pays its link time so the clock
+    stays strictly increasing. An undecodable iteration records the
+    epsilon cap as its wait (the agent gave up); a dead-agent iteration
+    records zero compute.
     """
     K, S = cfg.K, cfg.S
     P = b // K  # partition size per ECN slot
@@ -133,22 +148,51 @@ def make_schedule(
 
     # --- stragglers & decoding (vectorized over iterations) --------------
     ecn_t, link_t = sample_times(straggler, iters, K, seed=cfg.seed + 1)
+
+    # --- churn (DESIGN.md §13): censor crashed workers -------------------
+    act = np.ones(iters)
+    if straggler.churn_rate > 0:
+        churn_rng = np.random.default_rng([6, cfg.seed])
+        # The churn process is realized on the churn-free clock (an
+        # epsilon-capped provisional wait + the link hop) — documented
+        # one-way approximation: crashes reshape response times, but
+        # response times do not feed back into crash times.
+        prov = np.cumsum(
+            np.minimum(ecn_t.max(axis=1), straggler.epsilon) + link_t
+        )
+        starts = np.concatenate([[0.0], prov[:-1]])
+        ecn_up = straggler.sample_churn(starts, K, churn_rng)
+        agent_up = straggler.sample_churn(starts, net.N, churn_rng)
+        act = agent_up[np.arange(iters), agents].astype(float)
+        ecn_t = np.where(ecn_up, ecn_t, np.inf)
+
     if cfg.scheme == "uncoded":
         recv = ecn_t <= straggler.epsilon
         # nobody under the cap: wait for the fastest ECN
         none = ~recv.any(axis=1)
-        recv[none, np.argmin(ecn_t[none], axis=1)] = True
-        decode = recv * (K / recv.sum(axis=1, keepdims=True))
+        all_dead = np.isinf(ecn_t).all(axis=1)
+        fb = none & ~all_dead
+        recv[fb, np.argmin(ecn_t[fb], axis=1)] = True
+        decode = recv * (
+            K / np.maximum(recv.sum(axis=1, keepdims=True), 1)
+        )
         # Response = slowest counted ECN, capped at epsilon — except the
         # fallback rows, where the agent actually waited out the fastest
         # ECN's full (> epsilon) response; record that true wait.
         resp = np.minimum(ecn_t.max(axis=1), straggler.epsilon)
-        resp = np.where(none, ecn_t.min(axis=1), resp)
+        resp = np.where(fb, ecn_t.min(axis=1), resp)
+        if all_dead.any():  # every ECN crashed: skipped activation
+            act = act * ~all_dead
+            resp = np.where(all_dead, straggler.epsilon, resp)
         alive = recv
     else:
         order = np.argsort(ecn_t, axis=1)
         alive = np.zeros((iters, K), dtype=bool)
         np.put_along_axis(alive, order[:, : code.R], True, axis=1)
+        # Crashed ECNs never respond: their +inf times sort last, but
+        # when fewer than R survive they still land in the top-R slots —
+        # strike them from the alive set so decode sees only responders.
+        alive &= np.isfinite(ecn_t)
         # response time = the R-th fastest ECN, capped at epsilon
         r_th = np.take_along_axis(ecn_t, order[:, code.R - 1 : code.R], axis=1)
         resp = np.minimum(r_th[:, 0], straggler.epsilon)
@@ -177,10 +221,37 @@ def make_schedule(
         # Decode vectors depend only on the alive pattern, so solve the
         # lstsq once per distinct pattern — a sweep samples thousands of
         # iterations but only ever sees C(K, S)-ish patterns (plus the
-        # deadline-truncated ones).
+        # deadline-truncated and churn-censored ones). Under churn a
+        # surviving pattern can fall outside the family's decodable set
+        # (too few responders, or a subset the code cannot invert):
+        # those iterations become skipped activations with zero decode
+        # weights, recording the epsilon cap as the agent's futile wait.
         patterns, inverse = np.unique(alive, axis=0, return_inverse=True)
-        vecs = np.stack([code.decode_vector(a) for a in patterns])
-        decode = vecs[inverse]
+        vecs, decodable = [], []
+        for a in patterns:
+            vec = None
+            if a.sum() >= code.min_responses:
+                try:
+                    vec = code.decode_vector(a)
+                except ValueError:
+                    vec = None
+            decodable.append(vec is not None)
+            vecs.append(vec if vec is not None else np.zeros(K))
+        decode = np.stack(vecs)[inverse]
+        ok = np.asarray(decodable)[inverse]
+        if not ok.all():
+            act = act * ok
+            resp = np.where(ok, resp, straggler.epsilon)
+
+    if straggler.churn_rate > 0:
+        # Dead-agent iterations: no compute happens; the token hop alone
+        # advances the clock. Zero the decode row too so the (gated)
+        # device step never consumes a stale weight.
+        agent_dead = act == 0.0
+        resp = np.where(
+            agent_up[np.arange(iters), agents], resp, 0.0
+        )
+        decode = np.where(agent_dead[:, None], 0.0, decode)
 
     tau = cfg.c_tau * np.sqrt(np.arange(1, iters + 1))
     gamma = cfg.c_gamma / np.sqrt(np.arange(1, iters + 1))
@@ -190,6 +261,7 @@ def make_schedule(
         offsets=offsets,
         decode=decode,
         alive=alive,
+        act=act,
         tau=tau,
         gamma=gamma,
         resp_time=resp,

@@ -3,13 +3,24 @@
 The paper-era `StragglerModel` (ECN response times with planted
 stragglers, §V-A) is now the unified `TimingModel` that clocks EVERY
 method kernel — gossip rounds and walk steps included — plus the
-heterogeneous-fleet knobs (DESIGN.md §10). Import from
-`repro.core.timing` in new code; this module keeps the original names
-importable.
+heterogeneous-fleet knobs (DESIGN.md §10) and the event-driven mode
+(DESIGN.md §13). Import from `repro.core.timing` in new code; this
+module keeps the original names importable but warns on import
+(migration notes in DESIGN.md §13).
 """
 
 from __future__ import annotations
 
+import warnings
+
 from .timing import StragglerModel, TimingModel, sample_times
+
+warnings.warn(
+    "repro.core.straggler is deprecated: import StragglerModel/"
+    "TimingModel/sample_times from repro.core.timing instead "
+    "(DESIGN.md §13)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = ["StragglerModel", "TimingModel", "sample_times"]

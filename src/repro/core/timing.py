@@ -27,6 +27,19 @@ models, arXiv 2107.00481). Straggler events stay an *additive*
 exponential delay on top — transient network/queueing stalls, not a
 property of the machine class, so they are deliberately not scaled.
 
+Event-driven mode (DESIGN.md §13): ``tau_max``/``churn_rate`` switch the
+model from bulk-synchronous rounds to bounded-staleness updates and
+elastic fleets — the dynamic-network settings surveyed in arXiv
+1503.08855 and the edge-IIoT regime of arXiv 2107.00481. Both are
+*pre-sampled schedules*: :meth:`staleness_steps` maps per-update
+simulated delays tau ~ U(0, tau_max] onto integer step delays against a
+run's cumulative clock, and :meth:`sample_churn` realizes a
+crash/recover alternating-renewal process per worker on the same clock.
+Kernels thread the resulting arrays through their scan as runtime data
+(the PR-5 mask pattern), so asynchrony never retraces. ``tau_max = 0``
+and ``churn_rate = 0`` (the defaults) keep every method on the exact
+bulk-synchronous code path, bit for bit.
+
 All times are *simulated* (the container has no cluster — the paper
 itself simulates delays on a laptop), and every draw happens HOST-side
 in ``prepare`` so device steps stay pure (DESIGN.md §2).
@@ -65,6 +78,17 @@ class TimingModel:
     nobody can drop (gossip rounds, walk steps, the no-response
     fallback).
 
+    ``tau_max`` bounds the simulated delay of an *update landing*: each
+    transmitted update is delayed by tau ~ U(0, tau_max] seconds and
+    applied at the last iteration boundary within that window, so the
+    realized staleness never exceeds ``tau_max`` (DESIGN.md §13).
+    ``churn_rate`` is each worker's crash intensity (expected crashes
+    per simulated second while up); ``mttr`` the mean time-to-recovery
+    (0 = crashed workers never rejoin). ``staleness_cap`` bounds the
+    ring-buffer depth of in-flight updates a kernel carries — delays are
+    additionally clipped to ``staleness_cap - 1`` steps, which only ever
+    *shortens* a delay, so the tau_max bound survives the clip.
+
     ``deadline`` is the per-iteration *decode deadline* (DESIGN.md §11):
     when set and the gradient code supports partial recovery
     (``code.min_responses < code.R``), a coded agent decodes at the
@@ -87,11 +111,25 @@ class TimingModel:
     response: str = "uniform"  # one of _RESPONSES
     # Decode deadline for partial-recovery codes (None = wait for R).
     deadline: Optional[float] = None
+    # Event-driven mode (DESIGN.md §13): staleness bound, churn process.
+    tau_max: float = 0.0  # max simulated update delay; 0 = synchronous
+    churn_rate: float = 0.0  # crashes per sim-second per worker; 0 = none
+    mttr: float = 0.0  # mean time-to-recovery; 0 = crashes are permanent
+    staleness_cap: int = 8  # ring-buffer depth D; step delays < D
 
     def __post_init__(self) -> None:
         if self.deadline is not None and self.deadline <= 0:
             raise ValueError(
                 f"deadline must be positive or None, got {self.deadline}"
+            )
+        if self.tau_max < 0 or self.churn_rate < 0 or self.mttr < 0:
+            raise ValueError(
+                "tau_max, churn_rate, mttr must be >= 0, got "
+                f"({self.tau_max}, {self.churn_rate}, {self.mttr})"
+            )
+        if self.staleness_cap < 2:
+            raise ValueError(
+                f"staleness_cap must be >= 2, got {self.staleness_cap}"
             )
         if self.response not in _RESPONSES:
             raise ValueError(
@@ -104,6 +142,13 @@ class TimingModel:
             raise ValueError(
                 f"speed_classes must be positive, got {self.speed_classes}"
             )
+
+    @property
+    def is_async(self) -> bool:
+        """True when the event-driven mode is on (DESIGN.md §13): any
+        staleness bound or churn process switches a kernel onto its
+        ring-buffered async path and its own static signature."""
+        return self.tau_max > 0 or self.churn_rate > 0
 
     # -- worker-level draws ------------------------------------------------
 
@@ -148,8 +193,25 @@ class TimingModel:
 
     # -- per-kernel composite clocks (DESIGN.md §10) -----------------------
 
-    def gossip_round_times(
+    def gossip_components(
         self, net, iters: int, rng: np.random.Generator
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(comp (iters, N), per_agent_link (iters, N)) round ingredients.
+
+        Split out of :meth:`gossip_round_times` so the async path can
+        draw ONCE and then evaluate the round under different alive
+        masks (the churn grid is built on the churn-free clock,
+        DESIGN.md §13) without perturbing the seed contract.
+        """
+        comp = self.sample_ecn_times(iters, net.N, rng)
+        link = self.sample_link_times((iters, net.E), rng)
+        inc = np.zeros((net.E, net.N))
+        for e, (i, j) in enumerate(net.edges):
+            inc[e, i] = inc[e, j] = 1.0
+        return comp, link @ inc
+
+    def gossip_round_times(
+        self, net, iters: int, rng: np.random.Generator, alive=None
     ) -> np.ndarray:
         """(iters,) round times for all-agents-per-step gossip methods.
 
@@ -157,15 +219,26 @@ class TimingModel:
         local update and (b) pushed one message to each neighbor; an
         agent's sends serialize over its uplink while distinct agents
         transmit concurrently, so the link term is the *max over agents*
-        of the sum of their incident per-edge times.
+        of the sum of their incident per-edge times. With an ``alive``
+        (iters, N) mask, crashed agents neither compute nor transmit —
+        the round completes when the slowest *alive* agent does, floored
+        at ``base_lo`` so the clock stays strictly increasing even
+        through an all-crashed round (DESIGN.md §13).
         """
-        comp = self.sample_ecn_times(iters, net.N, rng)
-        link = self.sample_link_times((iters, net.E), rng)
-        inc = np.zeros((net.E, net.N))
-        for e, (i, j) in enumerate(net.edges):
-            inc[e, i] = inc[e, j] = 1.0
-        per_agent = link @ inc  # (iters, N) serialized neighbor transfers
-        return comp.max(axis=1) + per_agent.max(axis=1)
+        comp, per_agent = self.gossip_components(net, iters, rng)
+        return self.gossip_round_from(comp, per_agent, alive)
+
+    def gossip_round_from(
+        self, comp: np.ndarray, per_agent: np.ndarray, alive=None
+    ) -> np.ndarray:
+        """Round times from pre-drawn :meth:`gossip_components`."""
+        if alive is None:
+            return comp.max(axis=1) + per_agent.max(axis=1)
+        up = np.asarray(alive, dtype=bool)
+        rt = np.where(up, comp, 0.0).max(axis=1) + np.where(
+            up, per_agent, 0.0
+        ).max(axis=1)
+        return np.maximum(rt, self.base_lo)
 
     def walk_step_times(
         self, net, agents: np.ndarray, rng: np.random.Generator
@@ -180,6 +253,70 @@ class TimingModel:
         comp = self.sample_ecn_times(iters, net.N, rng)
         link = self.sample_link_times(iters, rng)
         return comp[np.arange(iters), np.asarray(agents, dtype=int)] + link
+
+    # -- event-driven schedules (DESIGN.md §13) ----------------------------
+
+    def staleness_steps(
+        self, times: np.ndarray, rng: np.random.Generator, n: int = 0
+    ) -> np.ndarray:
+        """Integer step delays under the bounded-staleness model.
+
+        ``times`` is a run's cumulative clock (iters,), ``times[k]`` the
+        simulated completion time of iteration k. The update emitted at
+        iteration k is delayed by tau_k ~ U(0, tau_max] and lands at the
+        LAST iteration boundary <= times[k] + tau_k, so the realized
+        delay never exceeds ``tau_max`` — the hard bound of DESIGN.md
+        §13 — and tau_max = 0 degenerates to delay 0 (land within the
+        emitting iteration, the synchronous semantics). Delays are then
+        clipped to ``staleness_cap - 1`` steps (the ring-buffer depth),
+        which again only shortens them. Returns (iters,) int32, or
+        (iters, n) with one independent delay per worker when ``n > 0``.
+        """
+        iters = len(times)
+        shape = (iters, n) if n else (iters,)
+        if self.tau_max <= 0:
+            return np.zeros(shape, dtype=np.int32)
+        tau = rng.uniform(0.0, self.tau_max, size=shape)
+        land = (times[:, None] if n else times) + tau
+        j = np.searchsorted(times, land.ravel(), side="right") - 1
+        k = np.arange(iters)[:, None] if n else np.arange(iters)
+        delta = j.reshape(shape) - k
+        return np.clip(delta, 0, self.staleness_cap - 1).astype(np.int32)
+
+    def sample_churn(
+        self, starts: np.ndarray, n: int, rng: np.random.Generator
+    ) -> np.ndarray:
+        """(iters, n) bool up/down mask of an elastic fleet.
+
+        Each worker alternates up-times ~ Exp(mean = 1/churn_rate) and
+        down-times ~ Exp(mean = mttr) in continuous simulated time (an
+        alternating-renewal crash/recover process; with ``mttr = 0`` the
+        first crash is permanent — the worker *leaves*). The process is
+        evaluated at ``starts`` — each iteration's simulated start time
+        — so a worker crashed when an iteration begins sits that whole
+        iteration out. Draw order (per worker: up, down, up, ...) is
+        part of the seed contract (DESIGN.md §13).
+        """
+        iters = len(starts)
+        up = np.ones((iters, n), dtype=bool)
+        if self.churn_rate <= 0:
+            return up
+        horizon = float(starts[-1]) if iters else 0.0
+        for w in range(n):
+            toggles = []
+            t, is_up = 0.0, True
+            while t <= horizon:
+                if is_up:
+                    t += rng.exponential(1.0 / self.churn_rate)
+                else:
+                    t += rng.exponential(self.mttr)
+                toggles.append(t)
+                if is_up and self.mttr <= 0:
+                    break  # permanent crash: no recovery draw
+                is_up = not is_up
+            cnt = np.searchsorted(np.asarray(toggles), starts, side="right")
+            up[:, w] = cnt % 2 == 0
+        return up
 
 
 # Backwards-compatible names: the paper-era straggler model IS the

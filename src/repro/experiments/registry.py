@@ -390,6 +390,67 @@ def fleet_frontier(iters: int = 1000, runs: int = 1000) -> SweepSpec:
     )
 
 
+def staleness_frontier(iters: int = 800, runs: int = 2) -> SweepSpec:
+    """Event-driven headline: convergence vs staleness bound x method (§13).
+
+    csI-ADMM's token and the gossip methods' broadcasts land with a
+    bounded simulated delay tau ~ U(0, tau_max]; tau_max = 0 is the
+    bulk-synchronous control arm and stays bit-identical to the
+    pre-async sweeps (it keeps the synchronous static signature, so
+    each method contributes exactly two dispatch groups: one sync, one
+    async ring). All schedules are host-side scan inputs — the whole
+    async half of the grid per method is ONE trace however many
+    tau_max values it spans.
+    """
+    return SweepSpec(
+        "staleness_frontier",
+        Case(
+            method="csI-ADMM", dataset="usps", K=3, M=60, scheme="cyclic",
+            S=1, alpha=0.05, iters=iters, p_straggle=0.3, delay=5e-3,
+        ),
+        axes={
+            "method": ["csI-ADMM", "D-ADMM", "DGD", "EXTRA"],
+            "tau_max": [0.0, 5e-4, 2e-3, 8e-3],
+            "seed": list(range(runs)),
+        },
+        fixup=_gossip_iters,
+        description="staleness bound tau_max x method, sync arm bit-exact",
+        x_axis="sim_time",
+    )
+
+
+def churn_grid(iters: int = 800, runs: int = 3) -> SweepSpec:
+    """Event-driven headline: accuracy under churn rate x code family (§13).
+
+    Agents and ECNs crash/recover as an alternating-renewal process
+    (mean uptime 1/churn_rate, mean repair mttr); crashed ECNs are
+    censored from the alive mask before decode, so each family's
+    decodable-pattern set is what is being stress-tested: cyclic decodes
+    only contiguous-ish R-subsets, MDS any R survivors, and the approx
+    family's deadline decode degrades gracefully below R. churn_rate = 0
+    is the synchronous control arm (bit-identical path).
+    """
+    return SweepSpec(
+        "churn_grid",
+        Case(
+            method="csI-ADMM", dataset="synthetic", K=6, M=360, S=2,
+            scheme="cyclic", c_tau=0.5, iters=iters,
+            p_straggle=0.3, delay=5e-3, mttr=0.05,
+        ),
+        axes={
+            "scheme": [
+                {"scheme": "cyclic"},
+                {"scheme": "mds"},
+                {"scheme": "approx", "deadline": 3e-4},
+            ],
+            "churn_rate": [0.0, 5.0, 25.0],
+            "seed": list(range(runs)),
+        },
+        description="churn rate x code family under elastic-fleet decode",
+        x_axis="sim_time",
+    )
+
+
 SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "fig3_minibatch": fig3_minibatch,
     "fig3_baselines": fig3_baselines,
@@ -405,6 +466,8 @@ SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "hetero_grid": hetero_grid,
     "mesh_scale": mesh_scale,
     "fleet_frontier": fleet_frontier,
+    "staleness_frontier": staleness_frontier,
+    "churn_grid": churn_grid,
 }
 
 

@@ -119,6 +119,11 @@ class Case:
     response: str = TimingModel.response
     # decode deadline for partial-recovery code families (DESIGN.md §11)
     deadline: Optional[float] = TimingModel.deadline
+    # event-driven mode (DESIGN.md §13): staleness bound + churn process
+    tau_max: float = TimingModel.tau_max
+    churn_rate: float = TimingModel.churn_rate
+    mttr: float = TimingModel.mttr
+    staleness_cap: int = TimingModel.staleness_cap
 
     def admm_config(self) -> ADMMConfig:
         return ADMMConfig(
@@ -142,6 +147,10 @@ class Case:
             speed_classes=self.speed_classes,
             response=self.response,
             deadline=self.deadline,
+            tau_max=self.tau_max,
+            churn_rate=self.churn_rate,
+            mttr=self.mttr,
+            staleness_cap=self.staleness_cap,
         )
 
     def label(self, *fields: str) -> str:

@@ -24,8 +24,22 @@ one jit trace (DESIGN.md §7). I-ADMM (exact_x) replaces the stochastic
 x-update with the closed-form full-batch solve (eq. 4a).
 
 Subclass hooks ``_perturb_x`` (pI-ADMM, `repro.methods.privacy`) and
-``_token_update`` (cq-sI-ADMM, `repro.methods.compression`) extend the
-family without touching the drivers.
+``_token_increment`` (cq-sI-ADMM, `repro.methods.compression`) extend
+the family without touching the drivers.
+
+Event-driven mode (DESIGN.md §13): when the run's `TimingModel` is
+async (``tau_max > 0`` or ``churn_rate > 0``) the token increment dz of
+iteration k lands with a bounded simulated delay instead of
+immediately. The kernel carries a ``pend`` ring buffer of
+``staleness_cap`` in-flight increments; host-precomputed write/read
+slots and the activity gate ride as THREE per-step arrays appended
+AFTER every subclass extra (read via negative indices, so the
+privacy/compression hooks' positional inputs are untouched). Skipped
+activations (crashed agent, undecodable churned pattern —
+`repro.core.admm.make_schedule`) gate x/y/dz to exact zeros. The sync
+path (``tau_max = 0``, ``churn_rate = 0``) takes the EXACT pre-async
+code — same statics, same steps, same jit trace — so synchronous runs
+stay bit-identical.
 """
 
 from __future__ import annotations
@@ -77,12 +91,18 @@ class IncrementalADMM(MethodKernel):
         self, problem: LeastSquaresProblem, run: ADMMRun, iters: int
     ) -> tuple:
         cfg = run.cfg
-        return (
+        sig = (
             self.name,
             problem.N, problem.b, problem.p, problem.d,
             problem.O_test.shape[0],
             cfg.K, problem.b // cfg.K, cfg.exact_x, iters,
         )
+        if run.timing is not None and run.timing.is_async:
+            # Async runs carry the pend ring + extra step inputs: their
+            # own trace, one dispatch group per ring depth (DESIGN.md
+            # §13). Sync runs keep the exact pre-async signature.
+            sig += ("async", run.timing.staleness_cap)
+        return sig
 
     def prepare(
         self,
@@ -113,6 +133,45 @@ class IncrementalADMM(MethodKernel):
         # pattern shares one jit trace.
         cover = np.abs(code.B) > 1e-12  # (K ecn, K partition)
         wmask = (sched["alive"].astype(dt) @ cover.astype(dt)) > 0
+        # One token hop per activation; response + link time per iter.
+        # Compressed tokens (cq-sI-ADMM) ship fewer bits, so their
+        # hop's link time scales by the same true bit cost the
+        # communication accounting charges (DESIGN.md §10).
+        sim_time = np.cumsum(
+            sched["resp_time"]
+            + sched["link_time"] * self._comm_per_iter(run, problem)
+        )
+        steps = self._extra_steps(
+            run, problem, iters,
+            (
+                sched["agents"],
+                sched["offsets"],
+                W_steps,
+                sched["tau"].astype(dt),
+                sched["gamma"].astype(dt),
+                wmask.astype(dt),
+            ),
+        )
+        statics = self._statics(run, problem, iters, sched)
+        if timing.is_async:
+            # Event-driven mode (DESIGN.md §13): write/read ring slots +
+            # activity gate append AFTER subclass extras — the step reads
+            # them via negative indices, so hook inputs keep their
+            # positions. Staleness is sampled on the run's own clock
+            # (stream [7, seed]); delay d in [0, D-1] steps lands the
+            # increment written at iteration k at the end of iteration
+            # k + d (d = 0 is the synchronous landing).
+            D = timing.staleness_cap
+            delta = timing.staleness_steps(
+                sim_time, np.random.default_rng([7, cfg.seed])
+            )
+            k = np.arange(iters)
+            steps = steps + (
+                ((k + delta) % D).astype(np.int32),
+                (k % D).astype(np.int32),
+                sched["act"].astype(dt),
+            )
+            statics = dict(statics, ASYNC=True, D=D)
         return Prepared(
             consts=(
                 problem.O,
@@ -123,28 +182,11 @@ class IncrementalADMM(MethodKernel):
                 np.asarray(cfg.rho, dtype=dt),
                 np.asarray(sched["mu"], dtype=np.int32),
             ),
-            steps=self._extra_steps(
-                run, problem, iters,
-                (
-                    sched["agents"],
-                    sched["offsets"],
-                    W_steps,
-                    sched["tau"].astype(dt),
-                    sched["gamma"].astype(dt),
-                    wmask.astype(dt),
-                ),
-            ),
-            statics=self._statics(run, problem, iters, sched),
+            steps=steps,
+            statics=statics,
             max_statics=dict(MU=int(sched["mu"])),
-            # One token hop per activation; response + link time per iter.
-            # Compressed tokens (cq-sI-ADMM) ship fewer bits, so their
-            # hop's link time scales by the same true bit cost the
-            # communication accounting charges (DESIGN.md §10).
             comm=np.cumsum(np.full(iters, self._comm_per_iter(run, problem))),
-            sim_time=np.cumsum(
-                sched["resp_time"]
-                + sched["link_time"] * self._comm_per_iter(run, problem)
-            ),
+            sim_time=sim_time,
         )
 
     def max_statics_bound(
@@ -210,7 +252,14 @@ class IncrementalADMM(MethodKernel):
         return aux
 
     def init(self, aux, statics):
-        return self.xyz_state(aux)
+        state = self.xyz_state(aux)
+        if statics.get("ASYNC"):
+            # Ring buffer of in-flight token increments (DESIGN.md §13):
+            # slot s holds the sum of increments landing at the end of
+            # the next iteration k with k % D == s.
+            N, p, d = aux["shape"]
+            state["pend"] = jnp.zeros((statics["D"], p, d), aux["dtype"])
+        return state
 
     def step(self, state, inp, aux, statics):
         i, off, w, tk, gk = inp[0], inp[1], inp[2], inp[3], inp[4]
@@ -251,7 +300,16 @@ class IncrementalADMM(MethodKernel):
             ).reshape(xi.shape)
 
         x_new = self._perturb_x(x_new, inp, aux, statics)
+        if statics.get("ASYNC"):
+            # Skipped activation (crashed agent / undecodable pattern):
+            # act = 0 freezes x and y, making dz an exact zero below.
+            # where-gating (not act-scaling) keeps the act = 1 path
+            # bitwise identical to the ungated computation.
+            act = inp[-1]
+            x_new = jnp.where(act > 0, x_new, xi)
         y_new = yi + rho * gk * (z - x_new)  # eq. (5b)
+        if statics.get("ASYNC"):
+            y_new = jnp.where(act > 0, y_new, yi)
         dz = ((x_new - xi) - (y_new - yi) / rho) / N  # eq. (4c) increment
         state = dict(state, x=x.at[i].set(x_new), y=y.at[i].set(y_new))
         state = self._token_update(state, dz, inp, aux, statics)
@@ -261,12 +319,43 @@ class IncrementalADMM(MethodKernel):
         """Hook: pI-ADMM adds Gaussian noise to the shared primal."""
         return x_new
 
+    def _token_increment(self, state, dz, inp, aux, statics):
+        """Hook: compute the transmitted token increment.
+
+        Returns ``(state_updates, c)`` where ``c`` is the increment the
+        active agent actually ships (cq-sI-ADMM compresses dz here) and
+        ``state_updates`` are carry entries the hook mutates (e.g. the
+        error-feedback residual). Split from the z application so the
+        async path can route ``c`` through the pend ring and gate the
+        hook's state on the activity mask without knowing its keys.
+        """
+        return {}, dz
+
     def _token_update(self, state, dz, inp, aux, statics):
-        """Hook: cq-sI-ADMM compresses the transmitted token increment."""
-        return dict(state, z=state["z"] + dz)
+        """Apply the token increment: directly (sync) or via the pend
+        ring with bounded staleness (async, DESIGN.md §13)."""
+        upd, c = self._token_increment(state, dz, inp, aux, statics)
+        if not statics.get("ASYNC"):
+            return dict(state, **upd, z=state["z"] + c)
+        wslot, rslot, act = inp[-3], inp[-2], inp[-1]
+        # Dead activations transmit nothing and leave hook state alone.
+        upd = {k: jnp.where(act > 0, v, state[k]) for k, v in upd.items()}
+        pend = state["pend"].at[wslot].add(
+            jnp.where(act > 0, c, jnp.zeros_like(c))
+        )
+        # Land every increment maturing at this iteration's boundary
+        # (the read slot includes this step's own write when delta = 0 —
+        # the synchronous landing).
+        z = state["z"] + pend[rslot]
+        pend = pend.at[rslot].set(jnp.zeros_like(state["z"]))
+        return dict(state, **upd, z=z, pend=pend)
 
     def final(self, state, aux, statics):
-        return state["x"], state["z"]
+        z = state["z"]
+        if statics.get("ASYNC"):
+            # Flush in-flight increments: the run ends, updates land.
+            z = z + state["pend"].sum(axis=0)
+        return state["x"], z
 
 
 ADMM_KERNEL = register(IncrementalADMM(), "sI-ADMM", "csI-ADMM", "I-ADMM")

@@ -112,7 +112,7 @@ class CompressedADMM(IncrementalADMM):
         state["e"] = jnp.zeros((p, d), aux["dtype"])  # compression residual
         return state
 
-    def _token_update(self, state, dz, inp, aux, statics):
+    def _token_increment(self, state, dz, inp, aux, statics):
         u = dz + state["e"]  # error feedback: re-inject past residual
         if statics["compressor"] == "topk":
             flat = u.reshape(-1)
@@ -127,7 +127,7 @@ class CompressedADMM(IncrementalADMM):
             c = jnp.where(
                 scale > 0.0, jnp.sign(u) * q * scale / L, jnp.zeros_like(u)
             )
-        return dict(state, z=state["z"] + c, e=u - c)
+        return {"e": u - c}, c
 
 
 CQ_SI_ADMM = register(CompressedADMM())

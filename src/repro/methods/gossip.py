@@ -12,6 +12,25 @@ EXTRA-era analyses (arXiv 1503.08855) — so gossip traces live on the same
 accuracy-vs-running-time axis as the paper's incremental methods.
 Timing draws use the composite seed stream [4, seed] (disjoint from the
 scalar-seeded ADMM schedule streams and privacy/quantization [2|3, seed]).
+
+Event-driven mode (DESIGN.md §13): when the run's `TimingModel.is_async`,
+each kernel switches to a delayed-broadcast model. Agents publish their
+iterates into a depth-D history ring (carried scan state); each round,
+agent j's *published* value is read at a per-agent staleness
+``delta[k, j]`` drawn host-side against the run's cumulative clock
+(``staleness_steps``), while gradients are always evaluated at the
+agent's own fresh iterate. Crashed agents (``sample_churn``, seed stream
+[6, seed]; staleness uses [7, seed]) freeze — their last published value
+persists in neighbors' mixing without reweighting, the
+frozen-neighbor model of dynamic-network gossip (arXiv 1503.08855).
+``delta = 0`` reads the previous round's publication — exactly the
+current iterate — so all three methods degenerate to the synchronous
+iterates (to within compiler reassociation of the distinct async
+program; the hard bit-identity guarantee is ``tau_max = 0``, which
+keeps the synchronous trace). D-ADMM achieves this with a dual-first
+update from the pre-update iterate — the stale age-1 publication at
+``delta = 0`` is x_k itself, so the dual accumulates exactly the
+synchronous residuals (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -70,21 +89,75 @@ def _lsq_consts(problem: LeastSquaresProblem, mix: np.ndarray, *scalars):
 class _GossipKernel(MethodKernel):
     """Shared shape/metric/timing plumbing for all-agents-per-step methods."""
 
+    # How many past publications a step reads per agent: 1 for the
+    # one-round-back mixing of DGD/D-ADMM, 2 for EXTRA's two-term
+    # recursion. Staleness is clipped to D - _ages so the oldest read
+    # is still live in the depth-D ring (DESIGN.md §13).
+    _ages = 1
+
     def static_signature(
-        self, problem: LeastSquaresProblem, cfg, iters: int
+        self, problem: LeastSquaresProblem, run, iters: int
     ) -> tuple:
-        return (
+        sig = (
             self.name,
             problem.N, problem.b, problem.p, problem.d,
             problem.O_test.shape[0], iters,
         )
+        timing = run.timing or TimingModel()
+        if timing.is_async:
+            sig = sig + ("async", timing.staleness_cap)
+        return sig
 
-    @staticmethod
-    def _sim_time(run: GossipRun, net: Network, iters: int) -> np.ndarray:
-        """Cumulative simulated seconds over gossip rounds (DESIGN.md §10)."""
+    def _event_schedules(self, run: GossipRun, net: Network, iters: int, dt):
+        """Host-side clock + async scan inputs (DESIGN.md §13).
+
+        Returns ``(sim_time, extra_steps, extra_statics)``. Synchronous
+        runs take the exact pre-async draw path (same rng stream [4,
+        seed], same call sequence) so their clock — and their dispatch
+        signature — is bit-identical to before the event-driven mode
+        existed.
+        """
         timing = run.timing or TimingModel()
         rng = np.random.default_rng([4, run.seed])
-        return np.cumsum(timing.gossip_round_times(net, iters, rng))
+        if not timing.is_async:
+            sim = np.cumsum(timing.gossip_round_times(net, iters, rng))
+            return sim, (), {}
+        comp, per_agent = timing.gossip_components(net, iters, rng)
+        nominal = timing.gossip_round_from(comp, per_agent)
+        up = np.ones((iters, net.N), dtype=bool)
+        if timing.churn_rate > 0:
+            # Churn is evaluated at iteration start times on the
+            # churn-free provisional clock (one-way coupling, §13).
+            starts = np.concatenate([[0.0], np.cumsum(nominal)[:-1]])
+            up = timing.sample_churn(
+                starts, net.N, np.random.default_rng([6, run.seed])
+            )
+        sim_time = np.cumsum(
+            timing.gossip_round_from(comp, per_agent, alive=up)
+        )
+        D = timing.staleness_cap
+        delta = timing.staleness_steps(
+            sim_time, np.random.default_rng([7, run.seed]), n=net.N
+        )
+        delta = np.minimum(delta, D - self._ages)
+        k = np.arange(iters)
+        # Read slots oldest-first (EXTRA reads age 2 then age 1); the
+        # publication of round k lands in slot k % D after all reads.
+        rslots = tuple(
+            ((k[:, None] - a - delta) % D).astype(np.int32)
+            for a in range(self._ages, 0, -1)
+        )
+        steps = (
+            ((k % D).astype(np.int32),)
+            + rslots
+            + (up.astype(dt),)
+        )
+        return sim_time, steps, dict(ASYNC=True, D=D)
+
+    @staticmethod
+    def _published(hist, rslot):
+        """Per-agent stale reads: hist (D, N, p, d), rslot (N,) -> (N, p, d)."""
+        return hist[rslot, jnp.arange(rslot.shape[0])]
 
     def _grad(self, aux, x):
         """Stacked full local gradients (N, p, d)."""
@@ -123,13 +196,16 @@ class DADMM(_GossipKernel):
             problem.T_test,
             np.asarray(run.param, dtype=dt),
         )
+        sim_time, extra, extra_statics = self._event_schedules(
+            run, net, iters, dt
+        )
         return Prepared(
             consts=consts,
-            steps=(),
-            statics=dict(name=self.name, iters=iters),
+            steps=extra,
+            statics=dict(name=self.name, iters=iters, **extra_statics),
             max_statics={},
             comm=np.cumsum(np.full(iters, 2.0 * net.E)),
-            sim_time=self._sim_time(run, net, iters),
+            sim_time=sim_time,
         )
 
     def setup(self, consts, statics):
@@ -149,17 +225,47 @@ class DADMM(_GossipKernel):
     def init(self, aux, statics):
         N, p, d = aux["shape"]
         zeros = jnp.zeros((N, p, d), aux["dtype"])
-        return dict(x=zeros, alpha=zeros)
+        state = dict(x=zeros, alpha=zeros)
+        if statics.get("ASYNC"):
+            state["hist"] = jnp.zeros((statics["D"], N, p, d), aux["dtype"])
+        return state
 
     def step(self, state, inp, aux, statics):
         x, alpha = state["x"], state["alpha"]
         A, deg, rho = aux["A"], aux["deg"], aux["rho"]
-        nbr_sum = jnp.einsum("ij,jpd->ipd", A, x)
-        rhs = aux["rhs0"] + rho * (deg[:, None, None] * x + nbr_sum) - alpha
-        x_new = jnp.linalg.solve(aux["Hs"], rhs)
-        nbr_sum_new = jnp.einsum("ij,jpd->ipd", A, x_new)
-        alpha = alpha + rho * (deg[:, None, None] * x_new - nbr_sum_new)
-        state = dict(x=x_new, alpha=alpha)
+        if statics.get("ASYNC"):
+            # Delayed-broadcast D-ADMM: dual-first from the PRE-update
+            # iterate. The published age-1 value at delta = 0 IS x_k, so
+            # alpha' accumulates exactly the synchronous dual residuals
+            # rho (deg x_k - A x_k) and the degenerate async path
+            # reproduces the synchronous sequence (DESIGN.md §13);
+            # crashed agents (act = 0) freeze primal and dual.
+            wslot, rslot, act = inp
+            stale = self._published(state["hist"], rslot)
+            nbr_sum = jnp.einsum("ij,jpd->ipd", A, stale)
+            alpha_new = alpha + rho * (deg[:, None, None] * x - nbr_sum)
+            rhs = (
+                aux["rhs0"]
+                + rho * (deg[:, None, None] * x + nbr_sum)
+                - alpha_new
+            )
+            x_new = jnp.linalg.solve(aux["Hs"], rhs)
+            gate = act[:, None, None] > 0
+            x_new = jnp.where(gate, x_new, x)
+            alpha = jnp.where(gate, alpha_new, alpha)
+            hist = state["hist"].at[wslot].set(x_new)
+            state = dict(x=x_new, alpha=alpha, hist=hist)
+        else:
+            nbr_sum = jnp.einsum("ij,jpd->ipd", A, x)
+            rhs = (
+                aux["rhs0"]
+                + rho * (deg[:, None, None] * x + nbr_sum)
+                - alpha
+            )
+            x_new = jnp.linalg.solve(aux["Hs"], rhs)
+            nbr_sum_new = jnp.einsum("ij,jpd->ipd", A, x_new)
+            alpha = alpha + rho * (deg[:, None, None] * x_new - nbr_sum_new)
+            state = dict(x=x_new, alpha=alpha)
         return state, self.metrics(x_new, x_new.mean(0), aux)
 
 
@@ -180,13 +286,17 @@ class DGD(_GossipKernel):
             if run.diminishing
             else np.full(iters, run.param)
         )
+        dt = problem.O.dtype
+        sim_time, extra, extra_statics = self._event_schedules(
+            run, net, iters, dt
+        )
         return Prepared(
             consts=_lsq_consts(problem, metropolis_weights(net)),
-            steps=(steps.astype(problem.O.dtype),),
-            statics=dict(name=self.name, iters=iters),
+            steps=(steps.astype(dt),) + extra,
+            statics=dict(name=self.name, iters=iters, **extra_statics),
             max_statics={},
             comm=np.cumsum(np.full(iters, 2.0 * net.E)),
-            sim_time=self._sim_time(run, net, iters),
+            sim_time=sim_time,
         )
 
     def setup(self, consts, statics):
@@ -196,21 +306,39 @@ class DGD(_GossipKernel):
         return aux
 
     def init(self, aux, statics):
-        return dict(x=jnp.zeros(aux["shape"], aux["dtype"]))
+        state = dict(x=jnp.zeros(aux["shape"], aux["dtype"]))
+        if statics.get("ASYNC"):
+            N, p, d = aux["shape"]
+            state["hist"] = jnp.zeros((statics["D"], N, p, d), aux["dtype"])
+        return state
 
     def step(self, state, inp, aux, statics):
-        (alpha,) = inp
         x = state["x"]
-        x_new = jnp.einsum("ij,jpd->ipd", aux["W"], x) - alpha * self._grad(
-            aux, x
-        )
-        return dict(x=x_new), self.metrics(x_new, x_new.mean(0), aux)
+        if statics.get("ASYNC"):
+            alpha, wslot, rslot, act = inp
+            # Mix stale published neighbor iterates; the gradient is at
+            # the agent's own fresh iterate (DESIGN.md §13).
+            mixed = jnp.einsum(
+                "ij,jpd->ipd", aux["W"], self._published(state["hist"], rslot)
+            )
+            x_new = mixed - alpha * self._grad(aux, x)
+            x_new = jnp.where(act[:, None, None] > 0, x_new, x)
+            hist = state["hist"].at[wslot].set(x_new)
+            state = dict(x=x_new, hist=hist)
+        else:
+            (alpha,) = inp
+            x_new = jnp.einsum(
+                "ij,jpd->ipd", aux["W"], x
+            ) - alpha * self._grad(aux, x)
+            state = dict(x=x_new)
+        return state, self.metrics(x_new, x_new.mean(0), aux)
 
 
 class EXTRA(_GossipKernel):
     """EXTRA [7]: exact first-order gossip with constant step size."""
 
     name = "EXTRA"
+    _ages = 2  # reads publications one AND two rounds back
 
     def config(self, case) -> GossipRun:
         return GossipRun(
@@ -218,13 +346,16 @@ class EXTRA(_GossipKernel):
         )
 
     def prepare(self, problem, net: Network, run: GossipRun, iters: int):
+        sim_time, extra, extra_statics = self._event_schedules(
+            run, net, iters, problem.O.dtype
+        )
         return Prepared(
             consts=_lsq_consts(problem, metropolis_weights(net), run.param),
-            steps=(),
-            statics=dict(name=self.name, iters=iters),
+            steps=extra,
+            statics=dict(name=self.name, iters=iters, **extra_statics),
             max_statics={},
             comm=np.cumsum(np.full(iters, 2.0 * net.E)),
-            sim_time=self._sim_time(run, net, iters),
+            sim_time=sim_time,
         )
 
     def setup(self, consts, statics):
@@ -240,16 +371,37 @@ class EXTRA(_GossipKernel):
         x1 = jnp.einsum("ij,jpd->ipd", aux["W"], x0) - aux[
             "alpha"
         ] * self._grad(aux, x0)
-        return dict(x_prev=x0, x=x1)
+        state = dict(x_prev=x0, x=x1)
+        if statics.get("ASYNC"):
+            N, p, d = aux["shape"]
+            # Slot D-1 holds x1 (the round-(-1) publication read at
+            # delta = 0 in round 0); slot D-2 stays x0 = 0.
+            hist = jnp.zeros((statics["D"], N, p, d), aux["dtype"])
+            state["hist"] = hist.at[statics["D"] - 1].set(x1)
+        return state
 
     def step(self, state, inp, aux, statics):
         x_prev, x_cur = state["x_prev"], state["x"]
+        if statics.get("ASYNC"):
+            wslot, rslot_prev, rslot, act = inp
+            mix_cur = self._published(state["hist"], rslot)
+            mix_prev = self._published(state["hist"], rslot_prev)
+        else:
+            mix_cur, mix_prev = x_cur, x_prev
         x_next = (
-            jnp.einsum("ij,jpd->ipd", aux["I_plus_W"], x_cur)
-            - jnp.einsum("ij,jpd->ipd", aux["W_tilde"], x_prev)
+            jnp.einsum("ij,jpd->ipd", aux["I_plus_W"], mix_cur)
+            - jnp.einsum("ij,jpd->ipd", aux["W_tilde"], mix_prev)
             - aux["alpha"] * (self._grad(aux, x_cur) - self._grad(aux, x_prev))
         )
-        state = dict(x_prev=x_cur, x=x_next)
+        if statics.get("ASYNC"):
+            gate = act[:, None, None] > 0
+            x_next = jnp.where(gate, x_next, x_cur)
+            # A frozen agent's recursion pair freezes with it.
+            new_prev = jnp.where(gate, x_cur, x_prev)
+            hist = state["hist"].at[wslot].set(x_next)
+            state = dict(x_prev=new_prev, x=x_next, hist=hist)
+        else:
+            state = dict(x_prev=x_cur, x=x_next)
         return state, self.metrics(x_next, x_next.mean(0), aux)
 
 

@@ -51,6 +51,16 @@ class WalkmanADMM(MethodKernel):
         iters: int,
     ) -> Prepared:
         cfg = run.cfg
+        timing = run.timing or TimingModel()
+        if timing.is_async:
+            # The walk's single token has no in-flight redundancy to
+            # delay and no fleet to churn — a crashed holder would simply
+            # end the run. Keep the failure loud rather than silently
+            # running synchronously (DESIGN.md §13).
+            raise NotImplementedError(
+                "W-ADMM has no event-driven mode (tau_max/churn_rate must "
+                "be 0); see DESIGN.md §13"
+            )
         N, b = problem.N, problem.b
         rng = np.random.default_rng(cfg.seed)
         agents = np.zeros(iters, dtype=np.int32)

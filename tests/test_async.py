@@ -1,0 +1,341 @@
+"""Event-driven timing mode tests (DESIGN.md §13).
+
+The contracts under test:
+
+- **Bulk-synchronous equivalence**: ``tau_max = 0`` / ``churn_rate = 0``
+  cells take the EXACT pre-async code path — bit-identical traces and
+  the unchanged synchronous static signature — on every execution tier.
+- **Degenerate asynchrony**: a vanishing staleness bound (every delay
+  rounds to 0 steps) reproduces the synchronous iterates through the
+  ring-buffer path up to compiler reassociation (the async scan is a
+  different XLA program, so op fusion may shift last bits; the HARD
+  bit-identity guarantee lives at tau_max = 0, which keeps the
+  synchronous trace). D-ADMM's dual-first async form is constructed so
+  its degenerate limit matches the synchronous sequence too.
+- **Staleness bound**: realized landing delays never exceed tau_max in
+  simulated time, and never exceed the ring depth in steps.
+- **Churn -> alive mask -> decode**: crashed ECNs carry exactly zero
+  decode weight, and NaN garbage planted in dead message rows cannot
+  leak through the fused combine (the §11 masking guarantee).
+- **No retraces**: a whole async grid (many tau_max/churn values) is
+  ONE jit trace per static signature (the PR-5/PR-7 schedule-as-data
+  pattern).
+"""
+
+import dataclasses
+import sys
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.admm import ADMMConfig, make_schedule
+from repro.core.coding import make_code
+from repro.core.graph import make_network
+from repro.core.timing import TimingModel
+from repro.experiments import Case, get_sweep, run_sweep
+from repro.kernels.ops import coded_combine
+from repro.methods import driver, get_kernel
+
+ITERS = 30
+
+
+def _admm_case(**kw) -> Case:
+    kw.setdefault("method", "csI-ADMM")
+    kw.setdefault("dataset", "synthetic")
+    kw.setdefault("K", 6)
+    kw.setdefault("M", 360)
+    kw.setdefault("S", 1)
+    kw.setdefault("scheme", "cyclic")
+    kw.setdefault("iters", ITERS)
+    kw.setdefault("p_straggle", 0.3)
+    kw.setdefault("delay", 5e-3)
+    return Case(**kw)
+
+
+def _gossip_case(method: str, **kw) -> Case:
+    kw.setdefault("dataset", "synthetic")
+    kw.setdefault("iters", 20)
+    kw.setdefault("alpha", 0.05)
+    kw.setdefault("rho", 0.1)
+    return Case(method=method, **kw)
+
+
+# --------------------------------------------------------------------------
+# Bulk-synchronous equivalence + degenerate asynchrony
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["serial", "batched"])
+def test_sync_cell_bit_identical_inside_mixed_sweep(mode):
+    """A tau_max=0 cell inside a mixed sync/async grid produces the same
+    bits as the standalone synchronous run — the acceptance bar for the
+    staleness_frontier control arm."""
+    sync = _admm_case()
+    mixed = [sync, dataclasses.replace(sync, tau_max=2e-3)]
+    ref = run_sweep([sync], mode=mode).traces[0]
+    res = run_sweep(mixed, mode=mode)
+    assert res.n_dispatches == 2  # sync keeps its own (old) signature
+    np.testing.assert_array_equal(res.traces[0].accuracy, ref.accuracy)
+    np.testing.assert_array_equal(res.traces[0].final_z, ref.final_z)
+    np.testing.assert_array_equal(res.traces[0].sim_time, ref.sim_time)
+
+
+@pytest.mark.parametrize(
+    "case",
+    [
+        _admm_case(),
+        _admm_case(method="cq-sI-ADMM", compressor="quant", bits=8),
+        _admm_case(method="pI-ADMM", sigma=0.01),
+        _gossip_case("DGD"),
+        _gossip_case("EXTRA"),
+        _gossip_case("D-ADMM"),
+    ],
+    ids=["csI-ADMM", "cq-sI-ADMM", "pI-ADMM", "DGD", "EXTRA", "D-ADMM"],
+)
+def test_degenerate_async_equals_sync(case):
+    """tau_max so small every delay rounds to 0 steps: the ring-buffer
+    path reproduces the synchronous iterates (write lands in the same
+    step it is read; act stays 1 everywhere) to within last-bit
+    compiler reassociation of the distinct async program."""
+    ref = run_sweep([case], mode="serial").traces[0]
+    deg = dataclasses.replace(case, tau_max=1e-12)
+    tr = run_sweep([deg], mode="serial").traces[0]
+    np.testing.assert_allclose(tr.accuracy, ref.accuracy, rtol=1e-12)
+    np.testing.assert_allclose(
+        tr.test_error, ref.test_error, rtol=1e-12, atol=1e-15
+    )
+    np.testing.assert_allclose(tr.final_z, ref.final_z, rtol=1e-12, atol=1e-15)
+
+
+def test_dadmm_async_runs_and_sync_arm_untouched():
+    """D-ADMM under real staleness runs finite and its sync arm inside
+    a mixed grid stays bit-exact (it keeps the synchronous trace)."""
+    sync = _gossip_case("D-ADMM")
+    ref = run_sweep([sync], mode="serial").traces[0]
+    res = run_sweep(
+        [sync, dataclasses.replace(sync, tau_max=2e-3)], mode="serial"
+    )
+    np.testing.assert_array_equal(res.traces[0].accuracy, ref.accuracy)
+    assert np.isfinite(res.traces[1].accuracy).all()
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a device mesh")
+def test_async_tier_agreement():
+    """Serial, batched, and sharded tiers agree elementwise on an async
+    grid (same scan, different layout — DESIGN.md §9)."""
+    cases = [
+        dataclasses.replace(_admm_case(tau_max=2e-3), seed=s)
+        for s in range(len(jax.devices()))
+    ]
+    serial = run_sweep(cases, mode="serial")
+    batched = run_sweep(cases, mode="batched")
+    sharded = run_sweep(cases, mode="sharded")
+    for ts, tb, tsh in zip(serial.traces, batched.traces, sharded.traces):
+        np.testing.assert_allclose(tb.accuracy, ts.accuracy, rtol=1e-12)
+        np.testing.assert_allclose(tsh.accuracy, ts.accuracy, rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Staleness schedule properties
+# --------------------------------------------------------------------------
+
+
+def test_staleness_steps_zero_bound_is_all_zero():
+    tm = TimingModel(tau_max=0.0)
+    times = np.cumsum(np.full(50, 1e-3))
+    delta = tm.staleness_steps(times, np.random.default_rng(0))
+    assert delta.dtype == np.int32
+    assert not delta.any()
+
+
+@pytest.mark.parametrize("n", [0, 7])
+def test_staleness_steps_respects_bounds(n):
+    """Realized landing delay <= tau_max in sim time AND < staleness_cap
+    in steps, for scalar and per-worker shapes."""
+    rng = np.random.default_rng(1)
+    times = np.cumsum(rng.uniform(1e-4, 3e-3, size=200))
+    tm = TimingModel(tau_max=4e-3, staleness_cap=6)
+    delta = tm.staleness_steps(times, np.random.default_rng(2), n=n)
+    assert delta.shape == ((200, n) if n else (200,))
+    assert delta.min() >= 0 and delta.max() < tm.staleness_cap
+    k = np.arange(200)
+    land = times[np.minimum((k[:, None] if n else k) + delta, 199)]
+    emit = times[:, None] if n else times
+    assert np.all(land - emit <= tm.tau_max + 1e-15)
+
+
+def test_sample_churn_properties():
+    tm = TimingModel(churn_rate=50.0, mttr=0.0)
+    starts = np.cumsum(np.full(300, 1e-3))
+    up = tm.sample_churn(starts, 5, np.random.default_rng(3))
+    assert up.shape == (300, 5)
+    # mttr=0: a crash is permanent — once down, down forever
+    for w in range(5):
+        col = up[:, w].astype(int)
+        assert np.all(np.diff(col) <= 0)
+    assert not up.all()  # at this rate someone crashed
+    # churn_rate=0: nobody ever crashes
+    assert TimingModel().sample_churn(starts, 5, np.random.default_rng(3)).all()
+    # recovery: with a short mttr some worker comes back
+    up2 = TimingModel(churn_rate=50.0, mttr=5e-3).sample_churn(
+        starts, 5, np.random.default_rng(4)
+    )
+    regained = (np.diff(up2.astype(int), axis=0) > 0).any()
+    assert regained
+
+
+def test_gossip_round_times_alive_mask():
+    """Crashed agents drop out of the round max; an all-crashed round
+    still advances the clock (floored at base_lo)."""
+    net = make_network(6, 0.5, seed=0)
+    tm = TimingModel()
+    comp, per_agent = tm.gossip_components(net, 10, np.random.default_rng(0))
+    nominal = tm.gossip_round_from(comp, per_agent)
+    comp2, per2 = tm.gossip_components(net, 10, np.random.default_rng(0))
+    np.testing.assert_array_equal(
+        nominal, tm.gossip_round_from(comp2, per2, alive=None)
+    )
+    alive = np.ones((10, 6), dtype=bool)
+    alive[3] = False  # everyone down in round 3
+    alive[5, :3] = False
+    masked = tm.gossip_round_from(comp, per_agent, alive=alive)
+    assert masked[3] == tm.base_lo
+    assert masked[5] <= nominal[5]
+    assert (masked > 0).all()
+
+
+# --------------------------------------------------------------------------
+# Churn -> alive mask -> decode
+# --------------------------------------------------------------------------
+
+
+def _churned_schedule(scheme="mds", churn_rate=40.0, mttr=0.02, iters=400):
+    cfg = ADMMConfig(M=360, K=6, S=2, scheme=scheme, seed=0)
+    net = make_network(6, 0.5, seed=0)
+    code = make_code(scheme, cfg.K, cfg.S, seed=0)
+    tm = TimingModel(
+        p_straggle=0.3, delay=5e-3, churn_rate=churn_rate, mttr=mttr
+    )
+    return make_schedule(cfg, net, code, tm, iters, b=720), code
+
+
+def test_crashed_ecns_never_weighted():
+    """Censored ECNs (crashed at iteration start) are outside the alive
+    mask and carry exactly zero decode weight; undecodable survivor
+    patterns become skipped activations."""
+    sched, code = _churned_schedule()
+    assert not sched["alive"].all()  # churn actually bit
+    assert np.all(sched["decode"][~sched["alive"]] == 0.0)
+    dead_iters = sched["act"] == 0.0
+    assert np.all(sched["decode"][dead_iters] == 0.0)
+    # the clock still advances strictly through dead iterations
+    t = np.cumsum(sched["resp_time"] + sched["link_time"])
+    assert np.all(np.diff(t) > 0)
+
+
+def test_undecodable_pattern_skips_activation():
+    """A pattern below min_responses cannot decode: cyclic with R=4 of
+    K=6 needs >= 4 survivors, so heavy permanent churn must produce
+    skipped activations with the epsilon cap as the recorded wait."""
+    sched, code = _churned_schedule(scheme="cyclic", churn_rate=80.0, mttr=0.0)
+    n_resp = sched["alive"].sum(axis=1)
+    undecodable = n_resp < code.min_responses
+    assert undecodable.any()
+    assert np.all(sched["act"][undecodable] == 0.0)
+
+
+def test_nan_in_dead_rows_cannot_leak():
+    """NaN planted in masked-out message rows never reaches the decoded
+    combine — the §11 guarantee churn relies on."""
+    rng = np.random.default_rng(0)
+    msgs = rng.normal(size=(6, 64)).astype(np.float32)
+    coeffs = rng.normal(size=6).astype(np.float32)
+    mask = np.array([1, 1, 0, 1, 0, 1], dtype=np.float32)
+    poisoned = msgs.copy()
+    poisoned[mask == 0] = np.nan
+    clean = coded_combine(msgs, coeffs, mask)
+    out = coded_combine(poisoned, coeffs, mask)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
+
+
+def test_churned_run_stays_finite_and_degrades():
+    """End-to-end: heavy churn leaves iterates finite, and the decodable
+    -pattern gap shows up — MDS (any-R decode) beats cyclic under the
+    same crash schedule."""
+    base = _admm_case(S=2, churn_rate=25.0, mttr=0.05, iters=200)
+    res = run_sweep(
+        [base, dataclasses.replace(base, scheme="mds")], mode="batched"
+    )
+    cyc, mds = res.traces
+    assert np.isfinite(cyc.accuracy).all() and np.isfinite(mds.accuracy).all()
+    assert mds.accuracy[-1] <= cyc.accuracy[-1] + 1e-9
+
+
+# --------------------------------------------------------------------------
+# No retraces; composition with streaming reductions
+# --------------------------------------------------------------------------
+
+
+def test_async_schedules_cause_no_retrace():
+    """Every tau_max/churn value of an async grid shares ONE jit trace:
+    the schedules are scan data, not statics (PR-5/PR-7 pattern)."""
+    driver._batch_fn.cache_clear()
+    cases = [
+        _admm_case(tau_max=t, churn_rate=c, mttr=0.05, iters=ITERS)
+        for t, c in [(5e-4, 0.0), (2e-3, 0.0), (8e-3, 10.0), (0.0, 25.0)]
+    ]
+    res = run_sweep(cases, mode="batched")
+    assert res.n_dispatches == 1
+    assert driver._batch_fn.cache_info().currsize == 1
+
+
+def test_async_composes_with_streaming_reductions():
+    """Event-driven runs flow through the in-scan Reduction fold (§12):
+    O(grid) summaries, no materialized traces."""
+    from repro.methods import Reduction
+
+    spec = get_sweep("churn_grid", iters=24, runs=1)
+    spec.reductions = Reduction(
+        fields=("accuracy",), budgets=(0.5, 1.0), x="sim_time"
+    )
+    res = run_sweep(spec, mode="batched")
+    assert res.traces == [] and res.reduced is not None
+    for v in res.reduced.values():
+        assert np.isfinite(v).all()
+
+
+def test_walkman_rejects_async():
+    """W-ADMM has no event-driven mode: loud failure, not silent sync."""
+    case = Case(method="W-ADMM", dataset="synthetic", iters=10, tau_max=1e-3)
+    with pytest.raises(NotImplementedError, match="event-driven"):
+        run_sweep([case], mode="serial")
+
+
+def test_timing_model_validation():
+    with pytest.raises(ValueError, match="tau_max"):
+        TimingModel(tau_max=-1.0)
+    with pytest.raises(ValueError, match="staleness_cap"):
+        TimingModel(staleness_cap=1)
+    assert not TimingModel().is_async
+    assert TimingModel(tau_max=1e-3).is_async
+    assert TimingModel(churn_rate=1.0).is_async
+
+
+# --------------------------------------------------------------------------
+# Back-compat shim
+# --------------------------------------------------------------------------
+
+
+def test_straggler_shim_warns_once_on_import():
+    """`repro.core.straggler` still resolves but deprecates loudly."""
+    sys.modules.pop("repro.core.straggler", None)
+    with pytest.warns(DeprecationWarning, match="repro.core.timing"):
+        import repro.core.straggler as shim
+    assert shim.StragglerModel is TimingModel
+    # re-import from cache: no second warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        import repro.core.straggler  # noqa: F401

@@ -1,0 +1,75 @@
+"""docs-check tool tests: the sweep-coverage gate (ISSUE 8 satellite).
+
+`tools/docs_check.py` is regex-based on purpose (no jax import in a CI
+lint step); these tests pin both halves — citation resolution and the
+registered-sweep/EXPERIMENTS.md coverage contract — including the
+failure mode: registering a sweep without documenting it must fail.
+"""
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import docs_check  # noqa: E402
+
+
+def test_registered_sweeps_parse_matches_registry():
+    """The source-level parse agrees with the live SWEEPS registry."""
+    from repro.experiments import SWEEPS
+
+    names = docs_check.registered_sweeps(
+        (ROOT / docs_check.REGISTRY).read_text()
+    )
+    assert set(names) == set(SWEEPS)
+
+
+def test_shipped_tree_passes():
+    cite_errors, n_refs = docs_check.citation_errors()
+    sweep_errors, n_sweeps = docs_check.sweep_coverage_errors()
+    assert cite_errors == [] and sweep_errors == []
+    assert n_refs > 0 and n_sweeps >= 16
+
+
+def test_undocumented_sweep_fails(tmp_path):
+    """Register a sweep the docs never mention -> docs-check error."""
+    root = tmp_path
+    (root / "src/repro/experiments").mkdir(parents=True)
+    (root / "src/repro/experiments/registry.py").write_text(
+        "SWEEPS: Dict[str, Callable[..., SweepSpec]] = {\n"
+        '    "fig5": fig5,\n'
+        '    "ghost_sweep": ghost_sweep,\n'
+        "}\n"
+    )
+    (root / "EXPERIMENTS.md").write_text(
+        "# Experiments\n\nThe fig5 sweep reproduces Fig. 5.\n"
+    )
+    errors, n = docs_check.sweep_coverage_errors(root)
+    assert n == 2
+    assert len(errors) == 1 and "ghost_sweep" in errors[0]
+
+
+def test_word_boundary_not_substring(tmp_path):
+    """'churn_grid_v2' in the doc must NOT satisfy 'churn_grid'... but a
+    name inside a table cell or backticks does count."""
+    root = tmp_path
+    (root / "src/repro/experiments").mkdir(parents=True)
+    (root / "src/repro/experiments/registry.py").write_text(
+        'SWEEPS = {\n    "churn_grid": churn_grid,\n}\n'
+    )
+    (root / "EXPERIMENTS.md").write_text("only `churn_grid_v2` here\n")
+    errors, _ = docs_check.sweep_coverage_errors(root)
+    assert len(errors) == 1
+    (root / "EXPERIMENTS.md").write_text("| `churn_grid` | table row |\n")
+    errors, _ = docs_check.sweep_coverage_errors(root)
+    assert errors == []
+
+
+def test_empty_registry_is_an_error(tmp_path):
+    root = tmp_path
+    (root / "src/repro/experiments").mkdir(parents=True)
+    (root / "src/repro/experiments/registry.py").write_text("SWEEPS = {\n}\n")
+    (root / "EXPERIMENTS.md").write_text("# Experiments\n")
+    errors, n = docs_check.sweep_coverage_errors(root)
+    assert n == 0 and len(errors) == 1

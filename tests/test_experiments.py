@@ -212,6 +212,9 @@ EXPECTED_GRIDS = {
     "hetero_grid": (15, 1),  # speed classes are host-side clock only
     "mesh_scale": (3, 1),  # S=0 schemes merge; S/scheme are runtime
     "fleet_frontier": (12, 1),  # response/scheme/deadline/S all runtime
+    # per method: one sync group (tau_max=0) + one async ring group
+    "staleness_frontier": (16, 8),
+    "churn_grid": (9, 2),  # churn_rate=0 keeps the sync signature
 }
 
 

@@ -1,11 +1,17 @@
 #!/usr/bin/env python
-"""Verify every DESIGN.md / EXPERIMENTS.md citation in the code resolves.
+"""Verify documentation stays in lockstep with the code. Two checks:
 
-Code and benchmarks cite documentation sections as ``DESIGN.md §N`` or
-``EXPERIMENTS.md §Name`` (plus the quoted ``EXPERIMENTS.md 'Paper
-claims'`` form). This script greps ``src/`` and ``benchmarks/`` for such
-references and fails if the cited section heading does not exist in the
-doc. Run via ``make docs-check``.
+1. **Citations** — code and benchmarks cite documentation sections as
+   ``DESIGN.md §N`` or ``EXPERIMENTS.md §Name`` (plus the quoted
+   ``EXPERIMENTS.md 'Paper claims'`` form). Every such reference in
+   ``src/`` and ``benchmarks/`` must resolve to a real heading.
+2. **Sweep coverage** — every sweep registered in
+   ``src/repro/experiments/registry.py`` (the keys of its ``SWEEPS``
+   dict, parsed from source so this script never imports jax) must be
+   mentioned somewhere in EXPERIMENTS.md. Registering a sweep without
+   documenting it fails CI.
+
+Run via ``make docs-check``.
 """
 
 from __future__ import annotations
@@ -17,11 +23,14 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "benchmarks")
 DOCS = ("DESIGN.md", "EXPERIMENTS.md")
+REGISTRY = pathlib.Path("src/repro/experiments/registry.py")
 
 # DESIGN.md §3  /  EXPERIMENTS.md §Perf  /  EXPERIMENTS.md 'Paper claims'
 REF_RE = re.compile(
     r"(DESIGN\.md|EXPERIMENTS\.md)\s+(?:§(\w+)|'([^']+)'|\"([^\"]+)\")"
 )
+# Entries of the SWEEPS dict literal: '"name": factory,'
+SWEEP_KEY_RE = re.compile(r'^\s*"([A-Za-z0-9_]+)"\s*:\s*\w+\s*,\s*$')
 
 
 def doc_sections(doc_path: pathlib.Path) -> set:
@@ -42,11 +51,12 @@ def doc_sections(doc_path: pathlib.Path) -> set:
     return sections
 
 
-def main() -> int:
+def citation_errors(root: pathlib.Path = ROOT) -> "tuple[list, int]":
+    """(errors, n_refs) for every doc citation under SCAN_DIRS."""
     docs = {}
     missing_docs = []
     for name in DOCS:
-        path = ROOT / name
+        path = root / name
         if path.exists():
             docs[name] = doc_sections(path)
         else:
@@ -55,13 +65,13 @@ def main() -> int:
     errors = []
     n_refs = 0
     for d in SCAN_DIRS:
-        for path in sorted((ROOT / d).rglob("*.py")):
+        for path in sorted((root / d).rglob("*.py")):
             text = path.read_text()
             for m in REF_RE.finditer(text):
                 doc, para, squote, dquote = m.groups()
                 target = para or squote or dquote
                 n_refs += 1
-                rel = path.relative_to(ROOT)
+                rel = path.relative_to(root)
                 if doc in missing_docs:
                     errors.append(f"{rel}: cites {doc} which does not exist")
                     continue
@@ -73,13 +83,55 @@ def main() -> int:
                 errors.append(
                     f"{rel}: cites {doc} §{target!r} — no such section"
                 )
+    return errors, n_refs
 
+
+def registered_sweeps(registry_text: str) -> "list[str]":
+    """SWEEPS dict keys, parsed from the registry source (no imports)."""
+    lines = registry_text.splitlines()
+    names: "list[str]" = []
+    in_dict = False
+    for line in lines:
+        if re.match(r"^SWEEPS\s*[:=]", line):
+            in_dict = True
+            continue
+        if in_dict:
+            if line.startswith("}"):
+                break
+            m = SWEEP_KEY_RE.match(line)
+            if m:
+                names.append(m.group(1))
+    return names
+
+
+def sweep_coverage_errors(root: pathlib.Path = ROOT) -> "tuple[list, int]":
+    """(errors, n_sweeps): registered sweeps EXPERIMENTS.md never mentions."""
+    names = registered_sweeps((root / REGISTRY).read_text())
+    if not names:
+        return [f"{REGISTRY}: found no SWEEPS entries to check"], 0
+    doc = (root / "EXPERIMENTS.md").read_text()
+    errors = [
+        f"{REGISTRY}: sweep '{name}' is registered but EXPERIMENTS.md "
+        "never mentions it"
+        for name in names
+        if not re.search(rf"\b{re.escape(name)}\b", doc)
+    ]
+    return errors, len(names)
+
+
+def main() -> int:
+    cite_errors, n_refs = citation_errors()
+    sweep_errors, n_sweeps = sweep_coverage_errors()
+    errors = cite_errors + sweep_errors
     if errors:
-        print(f"docs-check: {len(errors)} broken citation(s):")
+        print(f"docs-check: {len(errors)} problem(s):")
         for e in errors:
             print(f"  {e}")
         return 1
-    print(f"docs-check: {n_refs} citations in {SCAN_DIRS} all resolve")
+    print(
+        f"docs-check: {n_refs} citations in {SCAN_DIRS} all resolve; "
+        f"{n_sweeps} registered sweeps all documented in EXPERIMENTS.md"
+    )
     return 0
 
 
