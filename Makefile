@@ -5,14 +5,16 @@ PY := PYTHONPATH=src python
 BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid,code_frontier,fleet_frontier,staleness_frontier,churn_grid
 BENCH_JSON := BENCH_ci.json
 
-# Coverage floor the CI matrix enforces on the coding + kernel layers
-# (the certification machinery of DESIGN.md §11): combined statement
-# coverage of repro.core.coding and repro.kernels.
-COV_TARGETS := --cov=repro.core.coding --cov=repro.kernels
+# Coverage floor the CI matrix enforces on the coding + kernel +
+# analysis layers (the certification machinery of DESIGN.md §11 and the
+# trace contracts of DESIGN.md §14): combined statement coverage of
+# repro.core.coding, repro.kernels and repro.analysis.
+COV_TARGETS := --cov=repro.core.coding --cov=repro.kernels \
+	--cov=repro.analysis
 COV_FLOOR := 85
 
 .PHONY: test test-cov test-slow bench bench-smoke bench-json \
-	bench-baseline lint docs-check
+	bench-baseline lint docs-check trace-lint trace-audit-baseline
 
 # Tier-1 verification: the whole suite, stop on first failure.
 test:
@@ -61,3 +63,14 @@ lint:
 # benchmarks/ must exist (tools/docs_check.py).
 docs-check:
 	$(PY) tools/docs_check.py
+
+# Trace-contract gate (DESIGN.md §14): AST invariant lint over src/ plus
+# the jaxpr audit of every registered kernel vs the pinned structural
+# counts in benchmarks/trace_audit.json. CI runs exactly this target.
+trace-lint:
+	$(PY) tools/trace_lint.py
+
+# Refresh the pinned jaxpr-audit counts after a deliberate trace change
+# (same workflow as bench-baseline for the perf gate).
+trace-audit-baseline:
+	$(PY) tools/trace_lint.py --update-audit

@@ -1,0 +1,22 @@
+"""Static trace-contract analysis (DESIGN.md §14).
+
+Two enforcement layers over the invariants every performance claim in
+this repo rests on:
+
+- `repro.analysis.astcheck` — an AST linter for the contracts that are
+  visible in source: the host/device split of `MethodKernel` (DESIGN.md
+  §2, §8), trace-safety of step bodies, spec-dataclass immutability,
+  statics-key completeness, and the `core.straggler` deprecation.
+- `repro.analysis.traceaudit` — a jaxpr audit that lowers every
+  registered kernel over a representative static-signature grid and
+  asserts structural properties of the traced program (fused Pallas
+  path present, zero callbacks, no silent f64->f32 demotion, pinned
+  trace counts per static group) against the committed
+  ``benchmarks/trace_audit.json``.
+
+Both run via ``make trace-lint`` (`tools/trace_lint.py`) and gate CI.
+"""
+
+from .astcheck import Finding, RULES, lint_paths
+
+__all__ = ["Finding", "RULES", "lint_paths"]

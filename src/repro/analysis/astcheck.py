@@ -1,0 +1,780 @@
+"""AST invariant linter: the trace contracts, enforced at analysis time.
+
+Every execution tier in this repo is derived from ONE step function per
+algorithm (DESIGN.md §8), and every sweep headline depends on contracts
+that used to be enforced only by hand-audit after a regression (the PR 7
+fused-reduction identity drift, the PR 8 D-ADMM async discontinuity).
+This module turns those contracts into lint rules over ``src/``
+(DESIGN.md §14):
+
+- ``host-rng-in-device-code``: ``prepare`` samples everything random
+  host-side; device-side kernel methods (setup/init/step/final and the
+  hooks they call) and the Pallas modules under ``repro/kernels`` must
+  never touch ``np.random``/``random`` — host RNG inside a scan body is
+  either a trace-time constant (silently frozen noise) or a crash.
+- ``device-array-in-host-prepare``: the host side of the split
+  (``prepare``/``static_signature``/``config`` and their helpers) must
+  stay pure numpy. A ``jnp`` array materialized there devices-commits
+  host data before the driver stacks/shards it (DESIGN.md §2).
+- ``traced-python-control-flow``: no Python ``if``/``while``/
+  ``assert``/``bool()``/``float()``/``int()``/``.item()`` on traced
+  values inside device-side methods. Branching is only legal on
+  ``statics`` (the jit cache key) — anything else either fails to trace
+  or forces a retrace per value, breaking the one-trace-per-group
+  dispatch contract (DESIGN.md §7).
+- ``callback-in-scan-body``: no ``jax.debug``/``io_callback``/
+  ``pure_callback`` in device-side methods — a callback inside the
+  vmapped scan serializes every iteration through the host and breaks
+  the sharded tier (pallas_call + callbacks have no SPMD story,
+  DESIGN.md §9).
+- ``spec-dataclass-not-frozen``: spec dataclasses (``*Config``,
+  ``*Run``, ``*Spec``, `Case`, `Reduction`, `TimingModel`, ...) are jit
+  cache keys and grid dedupe keys; they must be ``frozen=True`` with no
+  mutable defaults.
+- ``statics-key-not-in-signature``: every ``statics[...]`` key a
+  device-side method reads must be produced by some kernel's host-side
+  statics construction — a key read under Python control flow in
+  ``step`` but absent from the statics dict is a latent KeyError and a
+  signature-completeness hole (the statics dict IS the jit cache key).
+- ``deprecated-straggler-import``: no in-repo module may import the
+  `repro.core.straggler` shim (import from `repro.core.timing`).
+
+The linter is pure stdlib ``ast`` — no jax import — so it runs as a
+cold CI step. Class relationships are resolved by name across all
+linted files (MethodKernel subclasses found transitively), and
+host/device method sets are computed per class by a ``self.method()``
+call-graph fixpoint seeded with the protocol's known host entry points
+(``prepare``/``config``/``static_signature``/``max_statics_bound``) and
+device entry points (``setup``/``init``/``step``/``final``). A method
+reachable from both sides is skipped as ambiguous rather than
+mis-flagged. Fixture corpus: ``tests/fixtures/lint``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "RULES", "lint_paths"]
+
+
+RULES: Dict[str, str] = {
+    "host-rng-in-device-code": (
+        "host RNG (np.random / random) inside a device-side kernel method"
+    ),
+    "device-array-in-host-prepare": (
+        "jax/jnp usage inside a host-side (prepare-path) kernel method"
+    ),
+    "traced-python-control-flow": (
+        "Python control flow / cast on a traced value in a device-side "
+        "method"
+    ),
+    "callback-in-scan-body": (
+        "jax.debug / io_callback / pure_callback inside a device-side "
+        "method"
+    ),
+    "spec-dataclass-not-frozen": (
+        "spec dataclass not frozen=True, or carries a mutable default"
+    ),
+    "statics-key-not-in-signature": (
+        "statics key read device-side but never produced by any "
+        "host-side statics construction"
+    ),
+    "deprecated-straggler-import": (
+        "import of the deprecated repro.core.straggler shim"
+    ),
+}
+
+# The MethodKernel protocol's fixed entry points (DESIGN.md §8).
+_DEVICE_SEED = ("setup", "init", "step", "final")
+_HOST_SEED = ("config", "static_signature", "prepare", "max_statics_bound")
+
+# Spec dataclasses are jit/grid keys; result containers are not.
+_SPEC_SUFFIXES = ("Config", "Run", "Spec")
+_SPEC_NAMES = {"Case", "Reduction", "TimingModel", "GradientCode",
+               "CodeFamily"}
+_SPEC_ALLOWLIST = {"SweepResult", "Prepared"}
+
+# Attribute reads that are static under tracing even on traced values.
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+# Builtins whose result is Python-level even for traced arguments.
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "range",
+                 "min", "max", "sorted", "enumerate", "zip"}
+_CAST_CALLS = {"bool", "float", "int", "complex"}
+_CALLBACK_NAMES = {"io_callback", "pure_callback", "debug_callback",
+                   "callback"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# --------------------------------------------------------------------------
+# Small AST helpers
+# --------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _base_name(node: ast.AST) -> Optional[str]:
+    """Last component of a class base expression (Name or Attribute)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_dataclass_decorator(dec: ast.AST) -> Optional[ast.Call]:
+    """The decorator Call if ``dec`` is (a call of) dataclass, else a
+    sentinel empty Call for the bare form, else None."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = _dotted(target)
+    if name in ("dataclass", "dataclasses.dataclass"):
+        return dec if isinstance(dec, ast.Call) else ast.Call(
+            func=target, args=[], keywords=[]
+        )
+    return None
+
+
+def _is_mutable_default(value: ast.AST) -> bool:
+    """Would this default expression alias shared mutable state?"""
+    if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(value, ast.Call):
+        name = _dotted(value.func) or ""
+        if name in ("list", "dict", "set", "bytearray"):
+            return True
+        if name.startswith(("np.", "numpy.", "jnp.", "jax.")):
+            return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# Project index: classes, kernel resolution, method classification
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ClassInfo:
+    name: str
+    path: pathlib.Path
+    node: ast.ClassDef
+    bases: Tuple[str, ...]
+
+    def methods(self) -> Dict[str, ast.FunctionDef]:
+        return {
+            item.name: item
+            for item in self.node.body
+            if isinstance(item, ast.FunctionDef)
+        }
+
+
+class _Index:
+    """Name-resolved view of every linted module (stdlib-only)."""
+
+    def __init__(self, files: Dict[pathlib.Path, ast.Module]):
+        self.files = files
+        self.classes: Dict[str, List[_ClassInfo]] = {}
+        for path, tree in files.items():
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ClassDef):
+                    bases = tuple(
+                        b for b in map(_base_name, node.bases) if b
+                    )
+                    self.classes.setdefault(node.name, []).append(
+                        _ClassInfo(node.name, path, node, bases)
+                    )
+
+    def kernel_classes(self) -> List[_ClassInfo]:
+        """Transitive subclasses of MethodKernel, resolved by base name."""
+        kernel_names: Set[str] = {"MethodKernel"}
+        changed = True
+        while changed:
+            changed = False
+            for name, infos in self.classes.items():
+                if name in kernel_names:
+                    continue
+                if any(
+                    b in kernel_names for info in infos for b in info.bases
+                ):
+                    kernel_names.add(name)
+                    changed = True
+        out = []
+        for name in kernel_names:
+            out.extend(self.classes.get(name, []))
+        return sorted(out, key=lambda c: (str(c.path), c.node.lineno))
+
+    def flattened_methods(
+        self, cls: _ClassInfo
+    ) -> Dict[str, ast.FunctionDef]:
+        """Own methods + nearest inherited ones (name-resolved MRO-ish)."""
+        resolved: Dict[str, ast.FunctionDef] = {}
+        seen: Set[str] = set()
+        queue: List[_ClassInfo] = [cls]
+        while queue:
+            info = queue.pop(0)
+            if info.name in seen:
+                continue
+            seen.add(info.name)
+            for mname, fn in info.methods().items():
+                resolved.setdefault(mname, fn)
+            for base in info.bases:
+                queue.extend(self.classes.get(base, []))
+        return resolved
+
+
+def _self_calls(fn: ast.FunctionDef) -> Set[str]:
+    """Names of methods invoked as ``self.X(...)`` / ``cls.X(...)``."""
+    calls: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(
+            node.func, ast.Attribute
+        ):
+            root = node.func.value
+            if isinstance(root, ast.Name) and root.id in ("self", "cls"):
+                calls.add(node.func.attr)
+    return calls
+
+
+def _classify(
+    index: _Index, cls: _ClassInfo
+) -> Tuple[Set[str], Set[str]]:
+    """(device_methods, host_methods) for one kernel class, by fixpoint
+    over the ``self.``-call graph from the protocol's entry points."""
+    flat = index.flattened_methods(cls)
+
+    def expand(seed: Iterable[str], other_seed: Set[str]) -> Set[str]:
+        members = {m for m in seed if m in flat}
+        changed = True
+        while changed:
+            changed = False
+            for m in sorted(members):
+                for callee in _self_calls(flat[m]):
+                    if (
+                        callee in flat
+                        and callee not in members
+                        and callee not in other_seed
+                    ):
+                        members.add(callee)
+                        changed = True
+        return members
+
+    device = expand(_DEVICE_SEED, set(_HOST_SEED))
+    host = expand(_HOST_SEED, set(_DEVICE_SEED))
+    ambiguous = device & host
+    return device - ambiguous, host - ambiguous
+
+
+# --------------------------------------------------------------------------
+# Statics-key production (host side) and consumption (device side)
+# --------------------------------------------------------------------------
+
+
+def _produced_statics_keys(fn: ast.FunctionDef) -> Set[str]:
+    """String keys this host-side method contributes to a statics dict:
+    ``dict(...)`` call keywords, dict-literal string keys, and
+    ``statics["key"] = ...`` subscript assignments."""
+    keys: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and _dotted(node.func) == "dict":
+            for kw in node.keywords:
+                if kw.arg is not None:
+                    keys.add(kw.arg)
+        elif isinstance(node, ast.Dict):
+            for key in node.keys:
+                if isinstance(key, ast.Constant) and isinstance(
+                    key.value, str
+                ):
+                    keys.add(key.value)
+        elif isinstance(node, ast.Assign):
+            for target in node.targets:
+                if (
+                    isinstance(target, ast.Subscript)
+                    and isinstance(target.slice, ast.Constant)
+                    and isinstance(target.slice.value, str)
+                ):
+                    keys.add(target.slice.value)
+    return keys
+
+
+def _consumed_statics_keys(
+    fn: ast.FunctionDef,
+) -> List[Tuple[str, int]]:
+    """(key, line) for every ``statics[...]`` / ``statics.get(...)``."""
+    reads: List[Tuple[str, int]] = []
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "statics"
+            and isinstance(node.slice, ast.Constant)
+            and isinstance(node.slice.value, str)
+        ):
+            reads.append((node.slice.value, node.lineno))
+        elif (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "get"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == "statics"
+            and node.args
+            and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)
+        ):
+            reads.append((node.args[0].value, node.lineno))
+    return reads
+
+
+# --------------------------------------------------------------------------
+# Trace-safety dataflow for device-side bodies
+# --------------------------------------------------------------------------
+
+
+class _TraceSafety:
+    """Which expressions are Python-level (safe to branch on) inside a
+    device-side method. Parameters other than ``self``/``statics`` bind
+    traced values; locals inherit safety from their right-hand side in
+    source order; ``.shape``-style attributes and ``len()`` of traced
+    arrays are static under tracing."""
+
+    def __init__(self, fn: ast.FunctionDef):
+        args = fn.args
+        names = [
+            a.arg
+            for a in (
+                list(args.posonlyargs) + list(args.args)
+                + list(args.kwonlyargs)
+            )
+        ]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        self.unsafe: Set[str] = {
+            n for n in names if n not in ("self", "cls", "statics")
+        }
+        # One pass in source order: assignment targets inherit safety.
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                self._bind(node.targets, node.value)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                self._bind([node.target], node.value)
+            elif isinstance(node, ast.AugAssign):
+                self._bind([node.target], node.value)
+            elif isinstance(node, ast.For):
+                self._bind([node.target], node.iter)
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                self._bind([node.optional_vars], node.context_expr)
+
+    def _bind(self, targets: Sequence[ast.AST], value: ast.AST) -> None:
+        tainted = not self.is_safe(value)
+        stack = list(targets)
+        while stack:
+            t = stack.pop()
+            if isinstance(t, (ast.Tuple, ast.List)):
+                stack.extend(t.elts)
+            elif isinstance(t, ast.Starred):
+                stack.append(t.value)
+            elif isinstance(t, ast.Name) and tainted:
+                self.unsafe.add(t.id)
+
+    def is_safe(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant) or node is None:
+            return True
+        if isinstance(node, ast.Name):
+            return node.id not in self.unsafe
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True
+            return self.is_safe(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_safe(node.value) and self.is_safe(node.slice)
+        if isinstance(node, ast.Call):
+            fname = _dotted(node.func)
+            if fname in _STATIC_CALLS:
+                return True
+            if isinstance(node.func, ast.Attribute):
+                # statics.get(...), cfg.method() style: safety of the root
+                return self.is_safe(node.func.value)
+            return False
+        if isinstance(node, ast.Compare):
+            # Key-membership on dict pytrees is Python-level: `"Gt" in aux`
+            if all(
+                isinstance(op, (ast.In, ast.NotIn)) for op in node.ops
+            ) and isinstance(node.left, ast.Constant):
+                return True
+            return self.is_safe(node.left) and all(
+                self.is_safe(c) for c in node.comparators
+            )
+        if isinstance(node, (ast.BoolOp,)):
+            return all(self.is_safe(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.is_safe(node.left) and self.is_safe(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_safe(node.operand)
+        if isinstance(node, ast.IfExp):
+            return (
+                self.is_safe(node.test)
+                and self.is_safe(node.body)
+                and self.is_safe(node.orelse)
+            )
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return all(self.is_safe(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return all(
+                self.is_safe(k) for k in node.keys if k is not None
+            ) and all(self.is_safe(v) for v in node.values)
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            return True
+        if isinstance(node, ast.Starred):
+            return self.is_safe(node.value)
+        if isinstance(node, ast.Slice):
+            return all(
+                self.is_safe(p)
+                for p in (node.lower, node.upper, node.step)
+                if p is not None
+            )
+        return False  # lambdas, comprehensions, await, ...: conservative
+
+
+# --------------------------------------------------------------------------
+# Per-method rule passes
+# --------------------------------------------------------------------------
+
+
+def _check_device_method(
+    fn: ast.FunctionDef,
+    rel: str,
+    produced: Set[str],
+    findings: List[Finding],
+) -> None:
+    safety = _TraceSafety(fn)
+    for node in ast.walk(fn):
+        # host-rng-in-device-code
+        if isinstance(node, ast.Attribute):
+            name = _dotted(node) or ""
+            if name.startswith(("np.random", "numpy.random", "random.")):
+                findings.append(Finding(
+                    "host-rng-in-device-code", rel, node.lineno,
+                    f"`{name}` in device-side method "
+                    f"`{fn.name}` — sample host-side in prepare() "
+                    "(DESIGN.md §2)",
+                ))
+        # callback-in-scan-body
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func) or ""
+            leaf = name.rsplit(".", 1)[-1]
+            if name.startswith("jax.debug") or (
+                leaf in _CALLBACK_NAMES
+                and (name.startswith("jax.") or name == leaf)
+            ):
+                findings.append(Finding(
+                    "callback-in-scan-body", rel, node.lineno,
+                    f"`{name}` in device-side method `{fn.name}` — "
+                    "callbacks serialize the vmapped scan through the "
+                    "host (DESIGN.md §9)",
+                ))
+            # traced casts: bool()/float()/int()/.item()
+            if name in _CAST_CALLS and any(
+                not safety.is_safe(a) for a in node.args
+            ):
+                findings.append(Finding(
+                    "traced-python-control-flow", rel, node.lineno,
+                    f"`{name}()` on a traced value in `{fn.name}` — "
+                    "forces a device sync or a concretization error",
+                ))
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("item", "tolist")
+                and not safety.is_safe(node.func.value)
+            ):
+                findings.append(Finding(
+                    "traced-python-control-flow", rel, node.lineno,
+                    f"`.{node.func.attr}()` on a traced value in "
+                    f"`{fn.name}`",
+                ))
+        # traced control flow
+        if isinstance(node, (ast.If, ast.While)):
+            if not safety.is_safe(node.test):
+                kw = "if" if isinstance(node, ast.If) else "while"
+                findings.append(Finding(
+                    "traced-python-control-flow", rel, node.lineno,
+                    f"Python `{kw}` on a traced value in `{fn.name}` — "
+                    "branch on statics or use jnp.where/lax.cond "
+                    "(DESIGN.md §7)",
+                ))
+        if isinstance(node, ast.IfExp) and not safety.is_safe(node.test):
+            findings.append(Finding(
+                "traced-python-control-flow", rel, node.lineno,
+                f"conditional expression on a traced value in `{fn.name}`",
+            ))
+        if isinstance(node, ast.Assert) and not safety.is_safe(node.test):
+            findings.append(Finding(
+                "traced-python-control-flow", rel, node.lineno,
+                f"`assert` on a traced value in `{fn.name}`",
+            ))
+    # statics-key completeness
+    for key, line in _consumed_statics_keys(fn):
+        if key not in produced:
+            findings.append(Finding(
+                "statics-key-not-in-signature", rel, line,
+                f"statics[{key!r}] read in `{fn.name}` but no host-side "
+                "statics construction produces it — add it to the "
+                "prepared statics/static_signature (DESIGN.md §8)",
+            ))
+
+
+def _check_host_method(
+    fn: ast.FunctionDef, rel: str, findings: List[Finding]
+) -> None:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id in ("jnp", "jax"):
+            findings.append(Finding(
+                "device-array-in-host-prepare", rel, node.lineno,
+                f"`{node.id}` used in host-side method `{fn.name}` — "
+                "the prepare path is pure numpy (DESIGN.md §2)",
+            ))
+
+
+def _check_kernels_module_fn(
+    fn: ast.FunctionDef, rel: str, findings: List[Finding]
+) -> None:
+    """Device-side rules for Pallas kernel modules (everything under
+    ``repro/kernels`` executes inside jit/pallas bodies)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute):
+            name = _dotted(node) or ""
+            if name.startswith(("np.random", "numpy.random", "random.")):
+                findings.append(Finding(
+                    "host-rng-in-device-code", rel, node.lineno,
+                    f"`{name}` in kernel module function `{fn.name}`",
+                ))
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func) or ""
+            leaf = name.rsplit(".", 1)[-1]
+            if name.startswith("jax.debug") or (
+                leaf in _CALLBACK_NAMES
+                and (name.startswith("jax.") or name == leaf)
+            ):
+                findings.append(Finding(
+                    "callback-in-scan-body", rel, node.lineno,
+                    f"`{name}` in kernel module function `{fn.name}`",
+                ))
+
+
+# --------------------------------------------------------------------------
+# Module-scope rules
+# --------------------------------------------------------------------------
+
+
+def _check_spec_dataclasses(
+    tree: ast.Module, rel: str, findings: List[Finding]
+) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        deco = None
+        for dec in node.decorator_list:
+            deco = _is_dataclass_decorator(dec)
+            if deco is not None:
+                break
+        if deco is None:
+            continue
+        is_spec = (
+            node.name.endswith(_SPEC_SUFFIXES) or node.name in _SPEC_NAMES
+        ) and node.name not in _SPEC_ALLOWLIST
+        if not is_spec:
+            continue
+        frozen = any(
+            kw.arg == "frozen"
+            and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True
+            for kw in deco.keywords
+        )
+        if not frozen:
+            findings.append(Finding(
+                "spec-dataclass-not-frozen", rel, node.lineno,
+                f"spec dataclass `{node.name}` must be "
+                "@dataclasses.dataclass(frozen=True) — it is a jit "
+                "cache / grid dedupe key (DESIGN.md §7)",
+            ))
+        for item in node.body:
+            value = None
+            if isinstance(item, ast.AnnAssign):
+                value = item.value
+            elif isinstance(item, ast.Assign):
+                value = item.value
+            if value is None:
+                continue
+            if isinstance(value, ast.Call) and (
+                _dotted(value.func) or ""
+            ).endswith("field"):
+                for kw in value.keywords:
+                    if kw.arg == "default" and _is_mutable_default(
+                        kw.value
+                    ):
+                        findings.append(Finding(
+                            "spec-dataclass-not-frozen", rel,
+                            item.lineno,
+                            f"mutable field default in `{node.name}`",
+                        ))
+            elif _is_mutable_default(value):
+                findings.append(Finding(
+                    "spec-dataclass-not-frozen", rel, item.lineno,
+                    f"mutable default in spec dataclass `{node.name}` — "
+                    "shared across every instance",
+                ))
+
+
+def _check_deprecated_imports(
+    tree: ast.Module, rel: str, findings: List[Finding]
+) -> None:
+    if rel.replace("\\", "/").endswith("repro/core/straggler.py"):
+        return  # the shim itself
+    for node in ast.walk(tree):
+        hit = None
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.endswith("core.straggler"):
+                    hit = alias.name
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.endswith(("core.straggler", "straggler")) and (
+                "straggler" in mod
+            ):
+                hit = mod
+            elif mod.endswith("core") and any(
+                a.name == "straggler" for a in node.names
+            ):
+                hit = f"{mod}.straggler"
+        if hit:
+            findings.append(Finding(
+                "deprecated-straggler-import", rel, node.lineno,
+                f"`{hit}` is a deprecated shim — import from "
+                "repro.core.timing (DESIGN.md §13)",
+            ))
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+
+def _iter_files(paths: Sequence[pathlib.Path]) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        else:
+            out.append(p)
+    return out
+
+
+def lint_paths(
+    paths: Sequence[pathlib.Path],
+    root: Optional[pathlib.Path] = None,
+) -> List[Finding]:
+    """Lint files/directories; returns findings sorted by location.
+
+    ``root`` (default: CWD if it contains the files) only affects how
+    paths are reported. Statics-key production is collected across ALL
+    given paths before consumption is checked, so lint the whole tree
+    (or one self-contained fixture file) at once.
+    """
+    files: Dict[pathlib.Path, ast.Module] = {}
+    rels: Dict[pathlib.Path, str] = {}
+    findings: List[Finding] = []
+    for path in _iter_files(paths):
+        try:
+            rel = str(
+                path.relative_to(root) if root is not None else path
+            )
+        except ValueError:
+            rel = str(path)
+        rels[path] = rel
+        try:
+            files[path] = ast.parse(
+                path.read_text(encoding="utf-8"), filename=str(path)
+            )
+        except SyntaxError as exc:
+            findings.append(Finding(
+                "syntax-error", rel, exc.lineno or 0, str(exc.msg)
+            ))
+    index = _Index(files)
+
+    # Pass 1: classify every kernel class's methods; collect produced
+    # statics keys from all host-side methods.
+    device_defs: Dict[int, Tuple[ast.FunctionDef, str]] = {}
+    host_defs: Dict[int, Tuple[ast.FunctionDef, str]] = {}
+    ambiguous: Set[int] = set()
+    produced: Set[str] = set()
+    for cls in index.kernel_classes():
+        device, host = _classify(index, cls)
+        own = cls.methods()
+        for mname, fn in own.items():
+            key = id(fn)
+            if mname in device:
+                if key in host_defs:
+                    ambiguous.add(key)
+                device_defs[key] = (fn, rels[cls.path])
+            elif mname in host:
+                if key in device_defs:
+                    ambiguous.add(key)
+                host_defs[key] = (fn, rels[cls.path])
+        # Produced keys come from the class's full host-side view
+        # (inherited prepare produces keys a subclass's step consumes).
+        flat = index.flattened_methods(cls)
+        for mname in host:
+            produced |= _produced_statics_keys(flat[mname])
+
+    # Pass 2: per-method rules.
+    for key, (fn, rel) in device_defs.items():
+        if key not in ambiguous:
+            _check_device_method(fn, rel, produced, findings)
+    for key, (fn, rel) in host_defs.items():
+        if key not in ambiguous:
+            _check_host_method(fn, rel, findings)
+
+    # Pass 3: module-scope rules.
+    for path, tree in files.items():
+        rel = rels[path]
+        _check_spec_dataclasses(tree, rel, findings)
+        _check_deprecated_imports(tree, rel, findings)
+        if "/kernels/" in str(path).replace("\\", "/"):
+            for node in ast.walk(tree):
+                if isinstance(node, ast.FunctionDef):
+                    _check_kernels_module_fn(node, rel, findings)
+
+    # Dedupe nested-attribute double hits at one location.
+    seen: Set[Tuple[str, str, int]] = set()
+    unique: List[Finding] = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        loc = (f.rule, f.path, f.line)
+        if loc not in seen:
+            seen.add(loc)
+            unique.append(f)
+    return unique

@@ -1,0 +1,366 @@
+"""Jaxpr trace audit: structural contracts of the lowered programs.
+
+The AST linter (`repro.analysis.astcheck`) checks what is visible in
+source; this module checks what the tracer actually produced. Every
+registered kernel is lowered (``jax.make_jaxpr`` — trace only, no
+compile) over a representative static-signature grid, and the closed
+jaxpr of each group's composed run function is walked recursively:
+
+- ``pallas_calls``: the coded ADMM path must lower through the fused
+  Pallas decode-combine + x-update (`kernels.ops.coded_admm_update`,
+  DESIGN.md §5); the exact_x path must NOT (it keeps the closed-form
+  solve). Audited per grid via ``expect_pallas``.
+- ``callbacks``: zero ``pure_callback``/``io_callback``/``debug_*``
+  primitives anywhere — a callback inside the vmapped scan serializes
+  every iteration through the host and breaks the sharded tier
+  (DESIGN.md §9). Asserted unconditionally, not against the baseline.
+- ``demotions``: count of f64→f32 ``convert_element_type`` sites. The
+  mask path deliberately builds f32 row masks inside the Pallas update
+  (PR 5), so the contract is a PINNED count — growth means a new silent
+  precision loss — plus an unconditional check that every output aval
+  of the composed run stays f64 (``f64_outputs``).
+- ``groups``: number of distinct static signatures the grid traces to.
+  This is the one-trace-per-group discipline at analysis time: the same
+  contract as the benchmark dispatch gate (`benchmarks/check.py`), but
+  caught when the statics change, not three PRs later when the
+  benchmark regresses. Any growth over the committed baseline fails.
+
+Counts are pinned in ``benchmarks/trace_audit.json`` (refresh with
+``python tools/trace_lint.py --update-audit`` after an intentional
+change, same workflow as ``make bench-baseline``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "AuditGrid",
+    "AUDIT_GRIDS",
+    "audit_report",
+    "compare_report",
+    "DEFAULT_BASELINE",
+]
+
+DEFAULT_BASELINE = (
+    pathlib.Path(__file__).resolve().parents[3]
+    / "benchmarks"
+    / "trace_audit.json"
+)
+
+_CALLBACK_PRIMS = {
+    "pure_callback",
+    "io_callback",
+    "debug_callback",
+    "debug_print",
+}
+
+_ITERS = 12  # enough for the scan to form; tracing cost only
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditGrid:
+    """One named audit cell: cases that must share trace structure.
+
+    ``expect_pallas`` — True: every group must contain >=1 pallas_call;
+    False: every group must contain none; None: recorded but unasserted.
+    ``expect_groups`` — the static-signature group count this grid MUST
+    trace to (the one-trace-per-group contract, asserted both against
+    this declared value and the committed baseline).
+    """
+
+    name: str
+    cases: Tuple  # Tuple[Case, ...] — untyped to keep jax imports lazy
+    expect_pallas: Optional[bool]
+    expect_groups: int
+
+
+def _cases(method: str, dataset: str = "usps", **axes) -> Tuple:
+    """Cartesian Case grid over keyword axes (each value a sequence)."""
+    import itertools
+
+    from repro.experiments import Case
+
+    base = dict(method=method, dataset=dataset, N=5, K=3, M=36,
+                iters=_ITERS)
+    if not axes:
+        return (Case(**base),)
+    names = list(axes)
+    return tuple(
+        Case(**{**base, **dict(zip(names, combo))})
+        for combo in itertools.product(*(axes[n] for n in names))
+    )
+
+
+def _default_grids() -> Tuple[AuditGrid, ...]:
+    # The coded grid mirrors the code_frontier sweep shape (DESIGN.md
+    # §11): every family x S x deadline cell shares ONE trace because
+    # masks/coeffs are data (PR 5) and MU reconciles via max_statics.
+    coded = (
+        _cases("csI-ADMM", scheme=("cyclic", "mds"), S=(1, 2))
+        + _cases("csI-ADMM", scheme=("approx",), S=(1,),
+                 deadline=(3e-4,))
+        + _cases("sI-ADMM", S=(0,))
+    )
+    return (
+        AuditGrid("admm_coded", coded, expect_pallas=True,
+                  expect_groups=1),
+        AuditGrid("admm_exact", _cases("I-ADMM"), expect_pallas=False,
+                  expect_groups=1),
+        # Event-driven mode (DESIGN.md §13): its own trace via the
+        # ("async", cap) signature suffix, still on the Pallas path.
+        AuditGrid("admm_async",
+                  _cases("csI-ADMM", scheme=("cyclic",), S=(1,),
+                         tau_max=(2e-3,)),
+                  expect_pallas=True, expect_groups=1),
+        AuditGrid("pi_admm", _cases("pI-ADMM", S=(0, 1),
+                                    scheme=("cyclic",)),
+                  expect_pallas=True, expect_groups=1),
+        # compressor is a static (branches the token path in step), so
+        # topk and quant are two legitimate trace groups (DESIGN.md §8).
+        AuditGrid("cq_admm",
+                  _cases("cq-sI-ADMM", compressor=("topk", "quant")),
+                  expect_pallas=True, expect_groups=2),
+        AuditGrid("walkman", _cases("W-ADMM"), expect_pallas=None,
+                  expect_groups=1),
+        AuditGrid("gossip_dadmm",
+                  _cases("D-ADMM", tau_max=(0.0, 2e-3)),
+                  expect_pallas=False, expect_groups=2),
+        AuditGrid("gossip_dgd", _cases("DGD", tau_max=(0.0, 2e-3)),
+                  expect_pallas=False, expect_groups=2),
+        AuditGrid("gossip_extra", _cases("EXTRA", tau_max=(0.0, 2e-3)),
+                  expect_pallas=False, expect_groups=2),
+    )
+
+
+# Materialized lazily: building Cases imports repro.experiments (jax).
+AUDIT_GRIDS: Dict[str, AuditGrid] = {}
+
+
+def _grids() -> Dict[str, AuditGrid]:
+    if not AUDIT_GRIDS:
+        for g in _default_grids():
+            AUDIT_GRIDS[g.name] = g
+    return AUDIT_GRIDS
+
+
+# --------------------------------------------------------------------------
+# Jaxpr walking
+# --------------------------------------------------------------------------
+
+
+def _sub_jaxprs(params: dict):
+    """Every jaxpr nested in an eqn's params (scan/cond/pjit/pallas/...)."""
+    import jax.extend.core as jex_core
+
+    def leaves(val):
+        if isinstance(val, (jex_core.Jaxpr, jex_core.ClosedJaxpr)):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from leaves(v)
+        elif isinstance(val, dict):
+            for v in val.values():
+                yield from leaves(v)
+
+    for val in params.values():
+        yield from leaves(val)
+
+
+def _walk(jaxpr, counts: Dict[str, int]) -> None:
+    inner = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    for eqn in inner.eqns:
+        prim = eqn.primitive.name
+        if prim == "pallas_call":
+            counts["pallas_calls"] += 1
+        if prim in _CALLBACK_PRIMS or "callback" in prim:
+            counts["callbacks"] += 1
+        if prim == "convert_element_type":
+            new = eqn.params.get("new_dtype")
+            olds = {str(v.aval.dtype) for v in eqn.invars
+                    if hasattr(v.aval, "dtype")}
+            if str(new) == "float32" and "float64" in olds:
+                counts["demotions"] += 1
+        for sub in _sub_jaxprs(eqn.params):
+            _walk(sub, counts)
+
+
+def _audit_group(kernel, case, prob, net) -> Dict[str, object]:
+    """Trace ONE representative run of a static group and count."""
+    import jax
+
+    from repro.methods import driver
+
+    cfg = kernel.config(case)
+    prep = kernel.prepare(prob, net, cfg, case.iters)
+    statics = {**prep.statics, **prep.max_statics}
+    fn = driver._compose(kernel, driver._statics_key(statics))
+    closed = jax.make_jaxpr(fn)(prep.consts, prep.steps)
+    counts = {"pallas_calls": 0, "callbacks": 0, "demotions": 0}
+    _walk(closed, counts)
+    out_dtypes = sorted(
+        {
+            str(a.dtype)
+            for a in closed.out_avals
+            if hasattr(a, "dtype") and "float" in str(a.dtype)
+        }
+    )
+    counts["f64_outputs"] = out_dtypes == ["float64"]
+    counts["out_dtypes"] = out_dtypes
+    return counts
+
+
+def audit_report(
+    names: Optional[Sequence[str]] = None,
+) -> Dict[str, dict]:
+    """Lower every audit grid and return the structural report.
+
+    Enables x64 (the repo-wide precision contract — tests/conftest.py
+    does the same for the suite) before any tracing.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.experiments.sweep import _materialize, _signature
+    from repro.methods import get_kernel
+
+    report: Dict[str, dict] = {}
+    net_cache: dict = {}
+    prob_cache: dict = {}
+    for grid in _grids().values():
+        if names and grid.name not in names:
+            continue
+        groups: Dict[tuple, Tuple] = {}
+        for case in grid.cases:
+            net, prob = _materialize(case, net_cache, prob_cache)
+            sig = _signature(case, prob)
+            groups.setdefault(sig, (case, prob, net))
+        entry: Dict[str, object] = {
+            "groups": len(groups),
+            "expect_pallas": grid.expect_pallas,
+            "signatures": {},
+        }
+        for sig, (case, prob, net) in sorted(
+            groups.items(), key=lambda kv: repr(kv[0])
+        ):
+            kernel = get_kernel(case.method)
+            counts = _audit_group(kernel, case, prob, net)
+            entry["signatures"][repr(sig)] = counts
+        report[grid.name] = entry
+    return report
+
+
+# --------------------------------------------------------------------------
+# Gate
+# --------------------------------------------------------------------------
+
+
+def compare_report(
+    fresh: Dict[str, dict],
+    baseline: Optional[Dict[str, dict]],
+) -> Tuple[List[str], List[str]]:
+    """(failures, notes) of the fresh report vs declared + pinned
+    contracts. ``baseline=None`` checks only the unconditional ones."""
+    failures: List[str] = []
+    notes: List[str] = []
+    grids = _grids()
+
+    for name, entry in fresh.items():
+        grid = grids[name]
+        sigs = entry["signatures"]
+        # Declared group count: the one-trace-per-group contract.
+        if entry["groups"] != grid.expect_groups:
+            failures.append(
+                f"{name}: {entry['groups']} static groups, grid declares "
+                f"{grid.expect_groups} — a statics change split (or "
+                "merged) the jit trace"
+            )
+        for sig, counts in sigs.items():
+            where = f"{name} {sig}"
+            if counts["callbacks"]:
+                failures.append(
+                    f"{where}: {counts['callbacks']} callback "
+                    "primitive(s) in the lowered scan (DESIGN.md §9)"
+                )
+            if grid.expect_pallas is True and not counts["pallas_calls"]:
+                failures.append(
+                    f"{where}: no pallas_call — the coded path lost the "
+                    "fused decode-combine kernel (DESIGN.md §5)"
+                )
+            if grid.expect_pallas is False and counts["pallas_calls"]:
+                failures.append(
+                    f"{where}: unexpected pallas_call on a non-coded "
+                    "path"
+                )
+            if not counts["f64_outputs"]:
+                failures.append(
+                    f"{where}: float outputs demoted — avals "
+                    f"{counts['out_dtypes']} (x64 contract)"
+                )
+
+    if baseline is None:
+        notes.append("no baseline: unconditional checks only")
+        return failures, notes
+
+    for name, base_entry in baseline.items():
+        if name not in fresh:
+            failures.append(
+                f"{name}: pinned in baseline but absent from the fresh "
+                "audit — grid removed without --update-audit"
+            )
+            continue
+        entry = fresh[name]
+        if entry["groups"] > base_entry["groups"]:
+            failures.append(
+                f"{name}: static groups grew {base_entry['groups']} -> "
+                f"{entry['groups']} (trace/dispatch regression)"
+            )
+        elif entry["groups"] < base_entry["groups"]:
+            notes.append(
+                f"{name}: static groups shrank {base_entry['groups']} -> "
+                f"{entry['groups']} — improvement; refresh with "
+                "--update-audit"
+            )
+        base_sigs = base_entry["signatures"]
+        for sig, counts in entry["signatures"].items():
+            base = base_sigs.get(sig)
+            if base is None:
+                notes.append(f"{name}: NEW signature {sig}")
+                continue
+            if counts["demotions"] > base["demotions"]:
+                failures.append(
+                    f"{name} {sig}: f64->f32 demotions grew "
+                    f"{base['demotions']} -> {counts['demotions']} — "
+                    "new silent precision loss"
+                )
+            elif counts["demotions"] < base["demotions"]:
+                notes.append(
+                    f"{name} {sig}: demotions shrank "
+                    f"{base['demotions']} -> {counts['demotions']}; "
+                    "refresh with --update-audit"
+                )
+    for name in fresh:
+        if name not in baseline:
+            notes.append(f"{name}: NEW grid (not yet pinned)")
+    return failures, notes
+
+
+def load_baseline(
+    path: pathlib.Path = DEFAULT_BASELINE,
+) -> Optional[Dict[str, dict]]:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text(encoding="utf-8"))
+
+
+def write_baseline(
+    report: Dict[str, dict], path: pathlib.Path = DEFAULT_BASELINE
+) -> None:
+    path.write_text(
+        json.dumps(report, indent=2, sort_keys=True) + "\n",
+        encoding="utf-8",
+    )

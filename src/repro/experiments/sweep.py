@@ -161,7 +161,7 @@ class Case:
         return f"{self.method}[{kv}]"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """Base case + named axes = a Cartesian experiment grid.
 
@@ -377,7 +377,7 @@ def run_sweep(
 
     # Group by static signature, preserving first-seen order.
     groups: Dict[tuple, List[int]] = {}
-    for idx, (case, (net, prob)) in enumerate(zip(cases, mats)):
+    for idx, (case, (_net, prob)) in enumerate(zip(cases, mats)):
         groups.setdefault(_signature(case, prob), []).append(idx)
 
     traces: List[Optional[Trace]] = [None] * len(cases)

@@ -176,16 +176,17 @@ def _parse_computations(text: str) -> Dict[str, _Comp]:
         rest = tail[om.end():]
         depth = 1
         args_chars = []
-        i = 0
+        close = len(rest) - 1  # malformed line: attrs degrade to ""
         for i, ch in enumerate(rest):
             if ch == "(":
                 depth += 1
             elif ch == ")":
                 depth -= 1
                 if depth == 0:
+                    close = i
                     break
             args_chars.append(ch)
-        attrs = rest[i + 1:]
+        attrs = rest[close + 1:]
         arg_str = "".join(args_chars)
         operands = re.findall(r"%([\w.\-]+)", arg_str)
         instr = _Instr(name, op, rtype, operands, attrs, rhs)

@@ -1,0 +1,21 @@
+"""BAD: debug callback inside the scan body.
+
+jax.debug.print / pure_callback / io_callback round-trip through the
+host every scan iteration, and pallas_call + callbacks have no SPMD
+story — the sharded tier walls off (DESIGN.md §9).
+"""
+
+import jax
+
+
+class ChattyKernel(MethodKernel):  # noqa: F821 — AST fixture, never imported
+    name = "chatty-fixture"
+
+    def prepare(self, problem, net, cfg, iters):
+        return Prepared(  # noqa: F821
+            consts=(), steps=(), statics=dict(name=self.name, iters=iters)
+        )
+
+    def step(self, state, inp, aux, statics):
+        jax.debug.print("state {}", state)  # <-- callback-in-scan-body
+        return state, state

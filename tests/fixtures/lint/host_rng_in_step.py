@@ -1,0 +1,21 @@
+"""BAD: host RNG inside a device-side step body.
+
+`np.random` in a traced function is at best a trace-time constant (the
+"noise" freezes into the compiled scan) and at worst a crash; sampling
+belongs in prepare() (DESIGN.md §2).
+"""
+
+import numpy as np
+
+
+class RngKernel(MethodKernel):  # noqa: F821 — AST fixture, never imported
+    name = "rng-fixture"
+
+    def prepare(self, problem, net, cfg, iters):
+        return Prepared(  # noqa: F821
+            consts=(), steps=(), statics=dict(name=self.name, iters=iters)
+        )
+
+    def step(self, state, inp, aux, statics):
+        noise = np.random.normal(size=3)  # <-- host-rng-in-device-code
+        return state + noise, state

@@ -1,0 +1,23 @@
+"""BAD: jnp array materialized on the host side of the split.
+
+prepare() is pure numpy by contract — the driver stacks its outputs on
+a leading runs axis and places them on devices itself; a jnp array here
+commits host data to a device before layout is known (DESIGN.md §2).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class EagerKernel(MethodKernel):  # noqa: F821 — AST fixture, never imported
+    name = "eager-fixture"
+
+    def prepare(self, problem, net, cfg, iters):
+        data = jnp.asarray(np.ones(4))  # <-- device-array-in-host-prepare
+        return Prepared(  # noqa: F821
+            consts=(data,), steps=(),
+            statics=dict(name=self.name, iters=iters),
+        )
+
+    def step(self, state, inp, aux, statics):
+        return state, state

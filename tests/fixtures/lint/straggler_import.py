@@ -1,0 +1,9 @@
+"""BAD: import of the deprecated repro.core.straggler shim.
+
+The shim only exists for external callers mid-migration; in-repo code
+imports TimingModel from repro.core.timing (DESIGN.md §13).
+"""
+
+from repro.core.straggler import StragglerModel  # <-- deprecated import
+
+__all__ = ["StragglerModel"]

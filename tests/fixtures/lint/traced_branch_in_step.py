@@ -1,0 +1,22 @@
+"""BAD: Python `if` on a traced value inside the scan body.
+
+The scan body is traced once per static signature; a Python branch on a
+traced scalar is a ConcretizationTypeError under jit — and if it DID
+evaluate, it would silently pin one branch into every iteration. Branch
+on statics or use jnp.where / lax.cond (DESIGN.md §7).
+"""
+
+
+class BranchyKernel(MethodKernel):  # noqa: F821 — AST fixture, never imported
+    name = "branchy-fixture"
+
+    def prepare(self, problem, net, cfg, iters):
+        return Prepared(  # noqa: F821
+            consts=(), steps=(), statics=dict(name=self.name, iters=iters)
+        )
+
+    def step(self, state, inp, aux, statics):
+        x, k = state
+        if k > 0:  # <-- traced-python-control-flow
+            x = x * 0.5
+        return (x, k), x

@@ -1,0 +1,14 @@
+"""BAD: spec dataclass without frozen=True.
+
+Spec dataclasses (`*Config`/`*Run`/`*Spec`, `Case`, `Reduction`, ...)
+are jit cache keys and grid dedupe keys; a mutable one invites in-place
+edits that silently split (or poison) the trace cache (DESIGN.md §7).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass  # <-- spec-dataclass-not-frozen
+class WobblyConfig:
+    rho: float = 1.0
+    iters: int = 100

@@ -297,9 +297,11 @@ def test_async_composes_with_streaming_reductions():
     O(grid) summaries, no materialized traces."""
     from repro.methods import Reduction
 
-    spec = get_sweep("churn_grid", iters=24, runs=1)
-    spec.reductions = Reduction(
-        fields=("accuracy",), budgets=(0.5, 1.0), x="sim_time"
+    spec = dataclasses.replace(
+        get_sweep("churn_grid", iters=24, runs=1),
+        reductions=Reduction(
+            fields=("accuracy",), budgets=(0.5, 1.0), x="sim_time"
+        ),
     )
     res = run_sweep(spec, mode="batched")
     assert res.traces == [] and res.reduced is not None

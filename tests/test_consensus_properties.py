@@ -103,7 +103,7 @@ def test_z_update_conservation():
                 rows.append(distinct[a, t])
     batch = {"tokens": jnp.asarray(np.concatenate(rows)).reshape(-1, 3)}
     state = rt.init_state(jax.random.key(1))
-    for k in range(5):
+    for _ in range(5):
         alive = jnp.asarray(np.ones((A, K), bool))
         new, _ = rt.train_step(state, batch, alive)
         dx = np.asarray(new["x"]["w"], np.float64) - np.asarray(state["x"]["w"], np.float64)

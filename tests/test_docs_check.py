@@ -1,9 +1,13 @@
 """docs-check tool tests: the sweep-coverage gate (ISSUE 8 satellite).
 
-`tools/docs_check.py` is regex-based on purpose (no jax import in a CI
-lint step); these tests pin both halves — citation resolution and the
-registered-sweep/EXPERIMENTS.md coverage contract — including the
-failure mode: registering a sweep without documenting it must fail.
+`tools/docs_check.py` works from source text on purpose (no jax import
+in a CI lint step) — citations by regex, the SWEEPS registry by
+``ast.parse`` (ISSUE 9 replaced the line-regex that silently dropped
+any entry with a trailing comment or wrapped onto two lines). These
+tests pin both halves — citation resolution and the registered-sweep/
+EXPERIMENTS.md coverage contract — including the failure modes:
+registering a sweep without documenting it must fail, and a registry
+parsing to zero sweeps is itself an error.
 """
 
 import pathlib
@@ -64,6 +68,30 @@ def test_word_boundary_not_substring(tmp_path):
     (root / "EXPERIMENTS.md").write_text("| `churn_grid` | table row |\n")
     errors, _ = docs_check.sweep_coverage_errors(root)
     assert errors == []
+
+
+def test_trailing_comment_and_wrapped_entries_parse(tmp_path):
+    """The exact shapes the old line-regex dropped: a trailing comment
+    after the factory, an entry wrapped across lines, and a key whose
+    factory is a call rather than a bare name. All must be checked —
+    and all must FAIL coverage when the doc never mentions them."""
+    root = tmp_path
+    (root / "src/repro/experiments").mkdir(parents=True)
+    (root / "src/repro/experiments/registry.py").write_text(
+        "SWEEPS: Dict[str, Callable[..., SweepSpec]] = {\n"
+        '    "commented": commented,  # gated via BENCH_SWEEPS\n'
+        '    "wrapped":\n'
+        "        make_wrapped_factory(iters=1200),\n"
+        '    "plain": plain,\n'
+        "}\n"
+    )
+    (root / "EXPERIMENTS.md").write_text("only `plain` documented\n")
+    errors, n = docs_check.sweep_coverage_errors(root)
+    assert n == 3
+    assert sorted(e.split("'")[1] for e in errors) == [
+        "commented",
+        "wrapped",
+    ]
 
 
 def test_empty_registry_is_an_error(tmp_path):

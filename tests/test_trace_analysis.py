@@ -1,0 +1,270 @@
+"""Trace-contract analyzer tests (DESIGN.md §14, ISSUE 9).
+
+Three layers:
+
+- the AST linter against the fixture corpus (`tests/fixtures/lint`):
+  each known-bad snippet fires exactly its rule, the clean fixture and
+  the shipped `src/` tree fire nothing;
+- the jaxpr-audit gate logic (`compare_report`) on synthetic reports —
+  growth fails, shrinkage notes, callbacks/expect_pallas/f64 fail
+  unconditionally — plus one real lowering of the cheapest audit grid
+  checked against the committed `benchmarks/trace_audit.json`;
+- the `core.straggler` deprecation cycle: the shim warns exactly once
+  per process and no in-repo module (src/, benchmarks/, examples/)
+  still imports it.
+"""
+
+import copy
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import RULES, lint_paths
+from repro.analysis import traceaudit
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "lint"
+
+sys.path.insert(0, str(ROOT / "tools"))
+
+import trace_lint  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# AST linter: fixture corpus
+# --------------------------------------------------------------------------
+
+FIXTURE_RULES = {
+    "host_rng_in_step.py": "host-rng-in-device-code",
+    "jnp_in_prepare.py": "device-array-in-host-prepare",
+    "traced_branch_in_step.py": "traced-python-control-flow",
+    "callback_in_step.py": "callback-in-scan-body",
+    "unfrozen_spec.py": "spec-dataclass-not-frozen",
+    "missing_statics_key.py": "statics-key-not-in-signature",
+    "straggler_import.py": "deprecated-straggler-import",
+}
+
+
+@pytest.mark.parametrize("fname,rule", sorted(FIXTURE_RULES.items()))
+def test_fixture_fires_exactly_its_rule(fname, rule):
+    findings = lint_paths([FIXTURES / fname])
+    assert findings, f"{fname} produced no findings"
+    assert {f.rule for f in findings} == {rule}
+
+
+def test_every_rule_has_a_fixture():
+    """The corpus stays in lockstep with the rule set: adding a rule
+    without a known-bad fixture fails here."""
+    assert set(FIXTURE_RULES.values()) == set(RULES)
+
+
+def test_clean_fixture_has_zero_findings():
+    assert lint_paths([FIXTURES / "clean.py"]) == []
+
+
+def test_shipped_tree_is_clean():
+    """src/ carries zero violations — the tree the rules were fixed
+    against (SweepSpec was frozen by this PR)."""
+    assert lint_paths([ROOT / "src"], root=ROOT) == []
+
+
+def test_findings_are_located_and_printable():
+    findings = lint_paths([FIXTURES / "host_rng_in_step.py"])
+    f = findings[0]
+    assert f.path.endswith("host_rng_in_step.py") and f.line > 0
+    assert f.rule in str(f) and str(f.line) in str(f)
+
+
+def test_linted_corpus_as_a_whole_fires_all_rules():
+    """Lint the whole corpus in one call (cross-file statics-key union
+    must not suppress the missing-key fixture: `ghost_gain` is produced
+    nowhere in the corpus either)."""
+    findings = lint_paths([FIXTURES])
+    assert {f.rule for f in findings} == set(RULES)
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def test_cli_nonzero_on_each_fixture(capsys):
+    for fname in FIXTURE_RULES:
+        rc = trace_lint.main(["--ast-only", str(FIXTURES / fname)])
+        out = capsys.readouterr().out
+        assert rc == 1, fname
+        assert FIXTURE_RULES[fname] in out
+
+
+def test_cli_zero_on_src(capsys):
+    assert trace_lint.main(["--ast-only"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_flag_contradiction():
+    with pytest.raises(SystemExit):
+        trace_lint.main(["--ast-only", "--audit-only"])
+
+
+# --------------------------------------------------------------------------
+# Jaxpr audit: gate logic on synthetic reports
+# --------------------------------------------------------------------------
+
+
+def _entry(groups=1, pallas=1, callbacks=0, demotions=1, f64=True):
+    return {
+        "groups": groups,
+        "expect_pallas": True,
+        "signatures": {
+            "('admm', 5)": {
+                "pallas_calls": pallas,
+                "callbacks": callbacks,
+                "demotions": demotions,
+                "f64_outputs": f64,
+                "out_dtypes": ["float64"] if f64 else ["float32"],
+            }
+        },
+    }
+
+
+def test_gate_passes_on_identical_reports():
+    fresh = {"admm_coded": _entry()}
+    fails, _ = traceaudit.compare_report(fresh, copy.deepcopy(fresh))
+    assert fails == []
+
+
+def test_gate_fails_on_callbacks_unconditionally():
+    fresh = {"admm_coded": _entry(callbacks=2)}
+    fails, _ = traceaudit.compare_report(fresh, None)
+    assert any("callback" in f for f in fails)
+
+
+def test_gate_fails_on_lost_pallas_path():
+    fresh = {"admm_coded": _entry(pallas=0)}
+    fails, _ = traceaudit.compare_report(fresh, None)
+    assert any("pallas_call" in f for f in fails)
+
+
+def test_gate_fails_on_f32_outputs():
+    fresh = {"admm_coded": _entry(f64=False)}
+    fails, _ = traceaudit.compare_report(fresh, None)
+    assert any("demoted" in f for f in fails)
+
+
+def test_gate_fails_on_group_growth():
+    base = {"admm_coded": _entry()}
+    fresh = {"admm_coded": _entry(groups=3)}
+    fails, _ = traceaudit.compare_report(fresh, base)
+    assert any("grew 1 -> 3" in f for f in fails)
+    # growth also breaks the grid's declared expect_groups
+    assert any("declares 1" in f for f in fails)
+
+
+def test_gate_fails_on_demotion_growth_but_notes_shrinkage():
+    base = {"admm_coded": _entry(demotions=1)}
+    fails, _ = traceaudit.compare_report(
+        {"admm_coded": _entry(demotions=2)}, base
+    )
+    assert any("demotions grew" in f for f in fails)
+    base = {"admm_coded": _entry(demotions=2)}
+    fails, notes = traceaudit.compare_report(
+        {"admm_coded": _entry(demotions=1)}, base
+    )
+    assert fails == [] and any("shrank" in n for n in notes)
+
+
+def test_gate_fails_on_grid_missing_from_fresh():
+    base = {"admm_coded": _entry(), "walkman": _entry()}
+    fresh = {"admm_coded": _entry()}
+    fails, _ = traceaudit.compare_report(fresh, base)
+    assert any("walkman" in f and "absent" in f for f in fails)
+
+
+def test_gate_notes_new_grid_without_failing():
+    base = {"admm_coded": _entry()}
+    fresh = {"admm_coded": _entry(), "walkman": _entry()}
+    # walkman's synthetic entry claims pallas on a None-expect grid: fix
+    fresh["walkman"]["expect_pallas"] = None
+    fails, notes = traceaudit.compare_report(fresh, base)
+    assert fails == []
+    assert any("walkman" in n and "NEW" in n for n in notes)
+
+
+def test_baseline_roundtrip(tmp_path):
+    path = tmp_path / "audit.json"
+    assert traceaudit.load_baseline(path) is None
+    traceaudit.write_baseline({"admm_coded": _entry()}, path)
+    assert traceaudit.load_baseline(path) == {"admm_coded": _entry()}
+
+
+# --------------------------------------------------------------------------
+# Jaxpr audit: one real lowering vs the committed pin
+# --------------------------------------------------------------------------
+
+
+def test_committed_baseline_matches_live_grids():
+    """Every pinned grid still exists in AUDIT_GRIDS (a renamed grid
+    without --update-audit would fail the gate in CI)."""
+    baseline = json.loads(
+        (ROOT / "benchmarks" / "trace_audit.json").read_text()
+    )
+    live = set(traceaudit._grids())
+    assert set(baseline) <= live
+    for name, entry in baseline.items():
+        assert entry["groups"] == traceaudit._grids()[name].expect_groups
+
+
+@pytest.mark.parametrize("grid", ["admm_exact", "walkman"])
+def test_real_lowering_matches_pin(grid):
+    """Lower the two cheapest grids for real (make_jaxpr only — no
+    compile) and gate against the committed counts end-to-end."""
+    baseline = json.loads(
+        (ROOT / "benchmarks" / "trace_audit.json").read_text()
+    )
+    fresh = traceaudit.audit_report(names=[grid])
+    fails, _ = traceaudit.compare_report(
+        fresh, {grid: baseline[grid]}
+    )
+    assert fails == []
+    assert fresh[grid]["signatures"] == baseline[grid]["signatures"]
+
+
+# --------------------------------------------------------------------------
+# straggler deprecation cycle (ISSUE 9 satellite)
+# --------------------------------------------------------------------------
+
+
+def test_straggler_shim_warns_exactly_once_per_process():
+    """Even with warnings forced to 'always', the shim's module body
+    runs once per process — so exactly ONE DeprecationWarning."""
+    code = (
+        "import warnings\n"
+        "with warnings.catch_warnings(record=True) as w:\n"
+        "    warnings.simplefilter('always')\n"
+        "    import repro.core.straggler\n"
+        "    import repro.core.straggler  # cached: no re-execution\n"
+        "dep = [x for x in w if issubclass(x.category, DeprecationWarning)\n"
+        "       and 'repro.core.timing' in str(x.message)]\n"
+        "print(len(dep))\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, check=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert out.stdout.strip() == "1"
+
+
+def test_no_in_repo_module_imports_the_shim():
+    """src/, benchmarks/ and examples/ are all shim-free — the linter's
+    deprecated-import rule applied beyond its default src/ scope."""
+    dirs = [ROOT / "src", ROOT / "benchmarks", ROOT / "examples"]
+    findings = [
+        f
+        for f in lint_paths([d for d in dirs if d.exists()], root=ROOT)
+        if f.rule == "deprecated-straggler-import"
+    ]
+    assert findings == []

@@ -7,15 +7,18 @@
    ``src/`` and ``benchmarks/`` must resolve to a real heading.
 2. **Sweep coverage** — every sweep registered in
    ``src/repro/experiments/registry.py`` (the keys of its ``SWEEPS``
-   dict, parsed from source so this script never imports jax) must be
-   mentioned somewhere in EXPERIMENTS.md. Registering a sweep without
-   documenting it fails CI.
+   dict, recovered by ``ast.parse`` of the source so this script never
+   imports jax) must be mentioned somewhere in EXPERIMENTS.md.
+   Registering a sweep without documenting it fails CI, and a registry
+   that parses to zero sweeps is itself an error — a silently empty
+   check is worse than a failing one.
 
 Run via ``make docs-check``.
 """
 
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
@@ -29,8 +32,6 @@ REGISTRY = pathlib.Path("src/repro/experiments/registry.py")
 REF_RE = re.compile(
     r"(DESIGN\.md|EXPERIMENTS\.md)\s+(?:§(\w+)|'([^']+)'|\"([^\"]+)\")"
 )
-# Entries of the SWEEPS dict literal: '"name": factory,'
-SWEEP_KEY_RE = re.compile(r'^\s*"([A-Za-z0-9_]+)"\s*:\s*\w+\s*,\s*$')
 
 
 def doc_sections(doc_path: pathlib.Path) -> set:
@@ -87,20 +88,36 @@ def citation_errors(root: pathlib.Path = ROOT) -> "tuple[list, int]":
 
 
 def registered_sweeps(registry_text: str) -> "list[str]":
-    """SWEEPS dict keys, parsed from the registry source (no imports)."""
-    lines = registry_text.splitlines()
+    """SWEEPS dict keys, recovered from the registry AST (no imports).
+
+    The line-regex predecessor matched only the exact shape
+    ``"name": factory,`` at end-of-line, so a trailing comment or a
+    wrapped entry silently dropped that sweep from coverage checking.
+    Parsing the module with ``ast`` makes the extraction insensitive to
+    formatting; anything assigned to ``SWEEPS`` as a dict literal (plain
+    or annotated assignment, at any nesting) contributes its string
+    keys.
+    """
     names: "list[str]" = []
-    in_dict = False
-    for line in lines:
-        if re.match(r"^SWEEPS\s*[:=]", line):
-            in_dict = True
-            continue
-        if in_dict:
-            if line.startswith("}"):
-                break
-            m = SWEEP_KEY_RE.match(line)
-            if m:
-                names.append(m.group(1))
+    for node in ast.walk(ast.parse(registry_text)):
+        value = None
+        if isinstance(node, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "SWEEPS"
+            for t in node.targets
+        ):
+            value = node.value
+        elif (
+            isinstance(node, ast.AnnAssign)
+            and isinstance(node.target, ast.Name)
+            and node.target.id == "SWEEPS"
+        ):
+            value = node.value
+        if isinstance(value, ast.Dict):
+            for key in value.keys:
+                if isinstance(key, ast.Constant) and isinstance(
+                    key.value, str
+                ):
+                    names.append(key.value)
     return names
 
 

@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Trace-contract gate: AST invariant lint + jaxpr trace audit.
+
+Two layers (DESIGN.md §14), one exit code:
+
+1. **AST lint** (`repro.analysis.astcheck`) — stdlib-only scan of
+   ``src/`` for host/device-split violations, traced Python control
+   flow, callbacks in scan bodies, unfrozen spec dataclasses,
+   statics-key completeness, and deprecated-shim imports. Fast; runs
+   first so a source-level violation fails before any jax import.
+2. **Jaxpr audit** (`repro.analysis.traceaudit`) — lowers every
+   registered kernel over a representative static-signature grid and
+   gates the structural counts (pallas_call presence, zero callbacks,
+   f64→f32 demotions, trace groups) against the committed
+   ``benchmarks/trace_audit.json``.
+
+Usage:
+  python tools/trace_lint.py                 # both layers, gate vs pin
+  python tools/trace_lint.py --ast-only      # source lint only (fast)
+  python tools/trace_lint.py --audit-only    # jaxpr audit only
+  python tools/trace_lint.py --update-audit  # refresh the pinned counts
+  python tools/trace_lint.py PATH [PATH...]  # lint specific paths
+                                             # (fixture corpus tests)
+
+Run via ``make trace-lint``; CI runs it as the ``analysis`` job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def run_ast_lint(paths: "list[pathlib.Path]") -> int:
+    from repro.analysis.astcheck import lint_paths
+
+    findings = lint_paths(paths, root=ROOT)
+    for f in findings:
+        print(f"  {f}")
+    scanned = ", ".join(str(p) for p in paths)
+    if findings:
+        print(f"trace-lint[ast]: {len(findings)} finding(s) in {scanned}")
+        return 1
+    print(f"trace-lint[ast]: clean ({scanned})")
+    return 0
+
+
+def run_jaxpr_audit(update: bool) -> int:
+    from repro.analysis import traceaudit
+
+    report = traceaudit.audit_report()
+    if update:
+        traceaudit.write_baseline(report)
+        print(
+            f"trace-lint[jaxpr]: pinned {len(report)} grids to "
+            f"{traceaudit.DEFAULT_BASELINE.relative_to(ROOT)}"
+        )
+        # --update still gates the unconditional contracts: a baseline
+        # refresh must never pin a callback or a lost Pallas path.
+        failures, _ = traceaudit.compare_report(report, None)
+    else:
+        baseline = traceaudit.load_baseline()
+        if baseline is None:
+            print(
+                "trace-lint[jaxpr]: WARNING no benchmarks/trace_audit.json"
+                " — run with --update-audit to pin"
+            )
+        failures, notes = traceaudit.compare_report(report, baseline)
+        for n in notes:
+            print(f"  note: {n}")
+    for f in failures:
+        print(f"  FAIL: {f}")
+    if failures:
+        print(f"trace-lint[jaxpr]: {len(failures)} contract failure(s)")
+        return 1
+    n_sigs = sum(len(e["signatures"]) for e in report.values())
+    print(
+        f"trace-lint[jaxpr]: {len(report)} grids / {n_sigs} static "
+        "groups lowered clean"
+    )
+    return 0
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "paths", nargs="*", type=pathlib.Path,
+        help="files/dirs to AST-lint (default: src/)",
+    )
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the jaxpr audit")
+    ap.add_argument("--audit-only", action="store_true",
+                    help="skip the AST lint")
+    ap.add_argument("--update-audit", action="store_true",
+                    help="rewrite benchmarks/trace_audit.json")
+    args = ap.parse_args(argv)
+    if args.ast_only and args.audit_only:
+        ap.error("--ast-only contradicts --audit-only")
+
+    rc = 0
+    if not args.audit_only:
+        paths = args.paths or [ROOT / "src"]
+        rc |= run_ast_lint([pathlib.Path(p) for p in paths])
+    if not args.ast_only and not args.paths:
+        rc |= run_jaxpr_audit(update=args.update_audit)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
