@@ -2,15 +2,16 @@ PY := PYTHONPATH=src python
 
 # Sweeps timed by the benchmark-in-CI gate (BENCH_ci.json vs
 # benchmarks/baseline.json); keep in sync with benchmarks/baseline.json.
-BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid,code_frontier,fleet_frontier,staleness_frontier,churn_grid
+BENCH_SWEEPS := fig5,mesh_scale,fig3e_runtime,hetero_grid,code_frontier,adaptive_frontier,fleet_frontier,staleness_frontier,churn_grid
 BENCH_JSON := BENCH_ci.json
 
 # Coverage floor the CI matrix enforces on the coding + kernel +
-# analysis layers (the certification machinery of DESIGN.md §11 and the
-# trace contracts of DESIGN.md §14): combined statement coverage of
-# repro.core.coding, repro.kernels and repro.analysis.
+# analysis + control layers (the certification machinery of DESIGN.md
+# §11, the trace contracts of §14 and the online controller of §15):
+# combined statement coverage of repro.core.coding, repro.kernels,
+# repro.analysis and repro.control.
 COV_TARGETS := --cov=repro.core.coding --cov=repro.kernels \
-	--cov=repro.analysis
+	--cov=repro.analysis --cov=repro.control
 COV_FLOOR := 85
 
 .PHONY: test test-cov test-slow bench bench-smoke bench-json \

@@ -6,7 +6,7 @@ this repo rests on:
 - `repro.analysis.astcheck` — an AST linter for the contracts that are
   visible in source: the host/device split of `MethodKernel` (DESIGN.md
   §2, §8), trace-safety of step bodies, spec-dataclass immutability,
-  statics-key completeness, and the `core.straggler` deprecation.
+  and statics-key completeness.
 - `repro.analysis.traceaudit` — a jaxpr audit that lowers every
   registered kernel over a representative static-signature grid and
   asserts structural properties of the traced program (fused Pallas

@@ -36,9 +36,6 @@ This module turns those contracts into lint rules over ``src/``
   statics construction — a key read under Python control flow in
   ``step`` but absent from the statics dict is a latent KeyError and a
   signature-completeness hole (the statics dict IS the jit cache key).
-- ``deprecated-straggler-import``: no in-repo module may import the
-  `repro.core.straggler` shim (import from `repro.core.timing`).
-
 The linter is pure stdlib ``ast`` — no jax import — so it runs as a
 cold CI step. Class relationships are resolved by name across all
 linted files (MethodKernel subclasses found transitively), and
@@ -81,9 +78,6 @@ RULES: Dict[str, str] = {
     "statics-key-not-in-signature": (
         "statics key read device-side but never produced by any "
         "host-side statics construction"
-    ),
-    "deprecated-straggler-import": (
-        "import of the deprecated repro.core.straggler shim"
     ),
 }
 
@@ -649,35 +643,6 @@ def _check_spec_dataclasses(
                 ))
 
 
-def _check_deprecated_imports(
-    tree: ast.Module, rel: str, findings: List[Finding]
-) -> None:
-    if rel.replace("\\", "/").endswith("repro/core/straggler.py"):
-        return  # the shim itself
-    for node in ast.walk(tree):
-        hit = None
-        if isinstance(node, ast.Import):
-            for alias in node.names:
-                if alias.name.endswith("core.straggler"):
-                    hit = alias.name
-        elif isinstance(node, ast.ImportFrom):
-            mod = node.module or ""
-            if mod.endswith(("core.straggler", "straggler")) and (
-                "straggler" in mod
-            ):
-                hit = mod
-            elif mod.endswith("core") and any(
-                a.name == "straggler" for a in node.names
-            ):
-                hit = f"{mod}.straggler"
-        if hit:
-            findings.append(Finding(
-                "deprecated-straggler-import", rel, node.lineno,
-                f"`{hit}` is a deprecated shim — import from "
-                "repro.core.timing (DESIGN.md §13)",
-            ))
-
-
 # --------------------------------------------------------------------------
 # Entry point
 # --------------------------------------------------------------------------
@@ -763,7 +728,6 @@ def lint_paths(
     for path, tree in files.items():
         rel = rels[path]
         _check_spec_dataclasses(tree, rel, findings)
-        _check_deprecated_imports(tree, rel, findings)
         if "/kernels/" in str(path).replace("\\", "/"):
             for node in ast.walk(tree):
                 if isinstance(node, ast.FunctionDef):

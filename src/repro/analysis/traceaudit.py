@@ -116,6 +116,14 @@ def _default_grids() -> Tuple[AuditGrid, ...]:
                   _cases("csI-ADMM", scheme=("cyclic",), S=(1,),
                          tau_max=(2e-3,)),
                   expect_pallas=True, expect_groups=1),
+        # Online controller (DESIGN.md §15): one trace per bandit algo
+        # via the ("adaptive", n_arms, algo) suffix — arm schedules are
+        # data, and the arm-stacked step still runs the Pallas combine.
+        AuditGrid("admm_adaptive",
+                  _cases("a-csI-ADMM",
+                         arms=((("cyclic", 1, None), ("approx", 1, 3e-4)),),
+                         bandit=("ucb1", "exp3")),
+                  expect_pallas=True, expect_groups=2),
         AuditGrid("pi_admm", _cases("pI-ADMM", S=(0, 1),
                                     scheme=("cyclic",)),
                   expect_pallas=True, expect_groups=1),

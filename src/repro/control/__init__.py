@@ -1,0 +1,34 @@
+"""Online control of the code/deadline frontier (DESIGN.md §15).
+
+A bandit controller (UCB1/EXP3, `repro.control.bandit`) rides the
+jitted scan carry of the coded-ADMM family and selects one (code
+family, S, deadline) arm per iteration from observed iteration
+wall-clock alone — arm schedules are pre-threaded data, so an adaptive
+run stays ONE dispatch with no retrace (`repro.control.kernel`,
+registered as method "a-csI-ADMM").
+"""
+
+from .bandit import (
+    BANDIT_ALGOS,
+    BanditPolicy,
+    init_state,
+    replay,
+    schedule_inputs,
+    select,
+    update,
+)
+from .kernel import ADAPTIVE_KERNEL, AdaptiveADMM, AdaptiveRun, device_pulls
+
+__all__ = [
+    "BANDIT_ALGOS",
+    "BanditPolicy",
+    "schedule_inputs",
+    "init_state",
+    "select",
+    "update",
+    "replay",
+    "AdaptiveRun",
+    "AdaptiveADMM",
+    "ADAPTIVE_KERNEL",
+    "device_pulls",
+]

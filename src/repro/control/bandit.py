@@ -1,0 +1,192 @@
+"""UCB1 / EXP3 bandit policies as scan-carry algebra (DESIGN.md §15).
+
+The online controller of `repro.control.kernel` selects a (code family,
+S, deadline) arm every iteration INSIDE a jitted ``lax.scan``. That
+forces the policy into a specific shape:
+
+- **State is a fixed pytree** ``{n: (A,), s: (A,)}`` riding the scan
+  carry: per-arm pull counts and per-arm score (reward sums for UCB1,
+  log-weights for EXP3). No Python control flow depends on it.
+- **Everything random or transcendental-in-the-iteration-index is
+  pre-threaded host-side** as per-step data, like PR 5's decode
+  coefficients and PR 8's staleness slots: EXP3's sampling uniforms
+  ``u`` (seed stream ``[8, seed]``) and UCB1's ``log k`` sequence are
+  both (iters,) arrays. With ``log`` hoisted off the device, the UCB1
+  recursion is built purely from correctly-rounded IEEE ops (div, sqrt,
+  mul, add, argmax), so the device pull sequence is bit-reproducible
+  against the numpy twin below.
+- **The host twin** (:func:`replay`) runs the SAME recursion in numpy
+  over the same pre-threaded tables. `prepare` uses it to realize the
+  pull-dependent simulated clock (`Prepared.sim_time`) and the async
+  staleness/activity schedules before the device ever runs — possible
+  because rewards are themselves pre-tabulated per (iteration, arm),
+  so the controller's trajectory is a deterministic function of data
+  the host already holds.
+
+Both policies maximize cumulative reward in [0, 1]; the controller
+feeds them the negative-wall-clock reward surface of
+:meth:`repro.core.timing.TimingModel.reward`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BANDIT_ALGOS",
+    "BanditPolicy",
+    "schedule_inputs",
+    "init_state",
+    "select",
+    "update",
+    "replay",
+]
+
+BANDIT_ALGOS = ("ucb1", "exp3")
+
+# Seed stream of the controller's sampling uniforms (the host/device
+# seed-stream registry: [2]=privacy, [4..6]=timing, [7]=staleness).
+UNIFORM_STREAM = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class BanditPolicy:
+    """One controller policy: algorithm + its (runtime) hyper-parameters.
+
+    ``c`` is UCB1's confidence-width multiplier; ``eta`` EXP3's learning
+    rate and ``gamma`` its uniform-exploration mixture. All three ride
+    the device as runtime constants (one (3,) array), so sweeping them
+    never retraces — only ``algo`` is a jit static.
+    """
+
+    algo: str = "ucb1"
+    c: float = 0.5
+    eta: float = 0.1
+    gamma: float = 0.1
+
+    def __post_init__(self) -> None:
+        if self.algo not in BANDIT_ALGOS:
+            raise ValueError(
+                f"unknown bandit algorithm {self.algo!r}; "
+                f"known: {BANDIT_ALGOS}"
+            )
+        if self.c < 0 or self.eta < 0:
+            raise ValueError(
+                f"bandit c/eta must be >= 0, got ({self.c}, {self.eta})"
+            )
+        if not 0 < self.gamma <= 1:
+            raise ValueError(
+                f"exp3 gamma must be in (0, 1], got {self.gamma}"
+            )
+
+    @property
+    def params(self) -> np.ndarray:
+        """The (3,) runtime-constant parameter vector [c, eta, gamma]."""
+        return np.array([self.c, self.eta, self.gamma])
+
+
+def schedule_inputs(iters: int, seed: int) -> "tuple":
+    """(u, logk) pre-threaded per-step controller inputs.
+
+    ``u``: EXP3 sampling uniforms, seed stream ``[UNIFORM_STREAM, seed]``
+    (drawn even for UCB1 so switching ``algo`` perturbs nothing else).
+    ``logk``: log(1), log(2), ... — UCB1's confidence numerator, hoisted
+    host-side so the device recursion never calls a transcendental.
+    """
+    rng = np.random.default_rng([UNIFORM_STREAM, seed])
+    u = rng.random(iters)
+    logk = np.log(np.arange(1, iters + 1, dtype=float))
+    return u, logk
+
+
+# -- device side (jnp): one select/update per scan step --------------------
+
+
+def init_state(n_arms: int, dtype) -> dict:
+    """Zeroed controller carry: per-arm pull counts and scores."""
+    return dict(
+        n=jnp.zeros(n_arms, dtype=dtype), s=jnp.zeros(n_arms, dtype=dtype)
+    )
+
+
+def _exp3_probs(s, par, n_arms: int):
+    """EXP3 arm distribution: gamma-mixed softmax of the log-weights."""
+    e = jnp.exp(s - jnp.max(s))
+    w = e / jnp.sum(e)
+    return (1.0 - par[2]) * w + par[2] / n_arms
+
+
+def select(algo: str, state, u, logk, par, n_arms: int):
+    """This iteration's arm (int32 scalar) from the carried state."""
+    n, s = state["n"], state["s"]
+    if algo == "ucb1":
+        k = jnp.sum(n)
+        nf = jnp.maximum(n, 1.0)
+        idx = s / nf + par[0] * jnp.sqrt(logk / nf)
+        arm = jnp.argmax(idx).astype(jnp.int32)
+        # Initialization round-robin: pull each arm once before trusting
+        # the confidence index.
+        return jnp.where(k < n_arms, k.astype(jnp.int32), arm)
+    # exp3: invert the mixed-softmax CDF at the pre-threaded uniform.
+    cdf = jnp.cumsum(_exp3_probs(s, par, n_arms))
+    return jnp.minimum(
+        jnp.sum((cdf < u).astype(jnp.int32)), n_arms - 1
+    ).astype(jnp.int32)
+
+
+def update(algo: str, state, arm, reward, par, n_arms: int):
+    """Fold the pulled arm's observed reward back into the carry."""
+    n = state["n"].at[arm].add(1.0)
+    if algo == "ucb1":
+        s = state["s"].at[arm].add(reward)
+    else:
+        # Importance-weighted reward estimate on the sampled arm.
+        p = _exp3_probs(state["s"], par, n_arms)
+        s = state["s"].at[arm].add(par[1] * reward / p[arm])
+    return dict(state, n=n, s=s)
+
+
+# -- host twin (numpy): the same recursion, sequentially -------------------
+
+
+def replay(
+    policy: BanditPolicy, rewards: np.ndarray, u: np.ndarray,
+    logk: np.ndarray,
+) -> np.ndarray:
+    """Pull sequence of the device controller, computed host-side.
+
+    ``rewards`` is the (iters, n_arms) pre-tabulated reward table, ``u``
+    and ``logk`` the :func:`schedule_inputs` arrays. Mirrors
+    :func:`select`/:func:`update` operation for operation (same maximum
+    conventions, same summation order), so the returned (iters,) int32
+    pulls match the device trajectory — asserted bit-for-bit in
+    ``tests/test_control.py``.
+    """
+    iters, n_arms = rewards.shape
+    n = np.zeros(n_arms)
+    s = np.zeros(n_arms)
+    pulls = np.zeros(iters, dtype=np.int32)
+    for t in range(iters):
+        if policy.algo == "ucb1":
+            k = n.sum()
+            if k < n_arms:
+                arm = int(k)
+            else:
+                nf = np.maximum(n, 1.0)
+                arm = int(np.argmax(s / nf + policy.c * np.sqrt(logk[t] / nf)))
+        else:
+            e = np.exp(s - np.max(s))
+            w = e / np.sum(e)
+            p = (1.0 - policy.gamma) * w + policy.gamma / n_arms
+            arm = min(int(np.sum(np.cumsum(p) < u[t])), n_arms - 1)
+        r = rewards[t, arm]
+        n[arm] += 1.0
+        if policy.algo == "ucb1":
+            s[arm] += r
+        else:
+            s[arm] += policy.eta * r / p[arm]
+        pulls[t] = arm
+    return pulls

@@ -55,6 +55,8 @@ __all__ = [
     "CODE_FAMILIES",
     "register_family",
     "make_code",
+    "check_arm_set",
+    "make_arm_set",
     "fractional_repetition_code",
     "cyclic_repetition_code",
     "mds_code",
@@ -511,3 +513,58 @@ def make_code(scheme: str, K: int, S: int, seed: int = 0) -> GradientCode:
     family = CODE_FAMILIES[scheme]
     family.check(K, S)
     return family.build(K, S, seed)
+
+
+# --------------------------------------------------------------------------
+# Arm sets for the online controller (DESIGN.md §15)
+# --------------------------------------------------------------------------
+
+
+def check_arm_set(arms, K: int) -> None:
+    """Validate a controller arm set without building anything.
+
+    ``arms`` is a sequence of ``(scheme, S, deadline)`` cells — the
+    frontier coordinates the bandit of `repro.control` selects among.
+    EVERY arm is checked before ANY code is constructed, so an
+    infeasible cell surfaces at arm-set construction with the same
+    uniform ``'<family>' code infeasible`` message `make_code` raises —
+    never as a trace-time or mid-sweep failure. Also rejects empty and
+    duplicate arm sets (a duplicate arm is a spec bug: the controller
+    would split pulls across indistinguishable cells).
+    """
+    if not arms:
+        raise ValueError("arm set is empty: the controller needs >= 1 arm")
+    seen = set()
+    for arm in arms:
+        if len(arm) != 3:
+            raise ValueError(
+                f"arm {arm!r} is not a (scheme, S, deadline) triple"
+            )
+        scheme, S, deadline = arm
+        if scheme not in CODE_FAMILIES:
+            raise ValueError(
+                f"unknown code family {scheme!r}; known: "
+                f"{sorted(CODE_FAMILIES)}"
+            )
+        CODE_FAMILIES[scheme].check(K, int(S))
+        if deadline is not None and deadline <= 0:
+            raise ValueError(
+                f"arm {arm!r}: deadline must be positive or None"
+            )
+        key = (scheme, int(S), deadline)
+        if key in seen:
+            raise ValueError(f"duplicate arm {arm!r} in arm set")
+        seen.add(key)
+
+
+def make_arm_set(arms, K: int, seed: int = 0) -> "tuple":
+    """Build the certified codes of a controller arm set.
+
+    Feasibility of the WHOLE set is pre-checked (:func:`check_arm_set`)
+    before the first build, so nothing is half-constructed when a later
+    arm is infeasible. Returns one `GradientCode` per arm, in arm order.
+    """
+    check_arm_set(arms, K)
+    return tuple(
+        make_code(scheme, K, int(S), seed=seed) for scheme, S, _ in arms
+    )

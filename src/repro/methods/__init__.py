@@ -12,6 +12,7 @@ DESIGN.md §9). Importing this package populates the `KERNELS` registry:
   W-ADMM, D-ADMM, DGD, EXTRA   (paper §V-A baselines)
   pI-ADMM                      (privacy-perturbed, arXiv 2003.10615)
   cq-sI-ADMM                   (compressed token, arXiv 2501.13516)
+  a-csI-ADMM                   (bandit-controlled frontier, DESIGN.md §15)
 """
 
 from .admm import ADMMRun, IncrementalADMM
@@ -22,6 +23,13 @@ from .gossip import DADMM, DGD, EXTRA, GossipRun
 from .privacy import PrivacyRun
 from .reductions import METRIC_FIELDS, Reduction, reduce_trace
 from .walkman import WalkmanADMM
+
+# The adaptive controller kernel lives in `repro.control` (it layers ON
+# TOP of the ADMM family) but registers through the same kernel table;
+# a plain module import — last, so `repro.methods.admm` is complete, and
+# attribute-free, so a controller-first import order can't deadlock the
+# partially-initialized package.
+import repro.control.kernel  # noqa: E402,F401
 
 __all__ = [
     "MethodKernel",

@@ -23,9 +23,14 @@ bound MU, which is what lets a whole straggler-tolerance sweep share
 one jit trace (DESIGN.md §7). I-ADMM (exact_x) replaces the stochastic
 x-update with the closed-form full-batch solve (eq. 4a).
 
-Subclass hooks ``_perturb_x`` (pI-ADMM, `repro.methods.privacy`) and
-``_token_increment`` (cq-sI-ADMM, `repro.methods.compression`) extend
-the family without touching the drivers.
+Subclass hooks ``_perturb_x`` (pI-ADMM, `repro.methods.privacy`),
+``_token_increment`` (cq-sI-ADMM, `repro.methods.compression`) and
+``_select_arm`` (a-csI-ADMM, `repro.control.kernel`) extend the family
+without touching the drivers. ``_select_arm`` runs FIRST: an adaptive
+subclass stacks every arm's per-step schedule on an extra axis and the
+hook resolves the carry-resident controller state into this iteration's
+live row, handing the base step a pseudo-``inp`` with the standard
+layout — the base algebra never learns arms exist (DESIGN.md §15).
 
 Event-driven mode (DESIGN.md §13): when the run's `TimingModel` is
 async (``tau_max > 0`` or ``churn_rate > 0``) the token increment dz of
@@ -262,6 +267,7 @@ class IncrementalADMM(MethodKernel):
         return state
 
     def step(self, state, inp, aux, statics):
+        state, inp, aux = self._select_arm(state, inp, aux, statics)
         i, off, w, tk, gk = inp[0], inp[1], inp[2], inp[3], inp[4]
         x, y, z = state["x"], state["y"], state["z"]
         xi, yi = x[i], y[i]
@@ -314,6 +320,19 @@ class IncrementalADMM(MethodKernel):
         state = dict(state, x=x.at[i].set(x_new), y=y.at[i].set(y_new))
         state = self._token_update(state, dz, inp, aux, statics)
         return state, self.metrics(state["x"], state["z"], aux)
+
+    def _select_arm(self, state, inp, aux, statics):
+        """Hook: the online controller resolves arm-stacked step inputs.
+
+        Runs before anything else in :meth:`step`. The base family is
+        non-adaptive — identity, so the synchronous/static paths keep
+        their exact pre-controller trace. `repro.control.kernel`
+        overrides this to pull a bandit arm from carry state, feed back
+        the observed-response reward, and return a standard-layout
+        pseudo-``inp`` selecting the live arm's schedule row
+        (DESIGN.md §15).
+        """
+        return state, inp, aux
 
     def _perturb_x(self, x_new, inp, aux, statics):
         """Hook: pI-ADMM adds Gaussian noise to the shared primal."""

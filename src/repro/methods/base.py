@@ -96,6 +96,16 @@ class MethodKernel:
     def static_signature(
         self, problem: LeastSquaresProblem, cfg, iters: int
     ) -> tuple:
+        """Hashable key of everything forcing a fresh jit trace.
+
+        Convention: variant execution modes extend the family's base
+        tuple with a tagged suffix rather than replacing it — async runs
+        append ``("async", staleness_cap)`` (DESIGN.md §13), adaptive
+        controller runs append ``("adaptive", n_arms, algo)``
+        (DESIGN.md §15). Suffixes keep base grids batching exactly as
+        before while guaranteeing a variant run never merges into a
+        group whose kernel would mis-build its config.
+        """
         raise NotImplementedError
 
     def prepare(

@@ -23,8 +23,6 @@ The contracts under test:
 """
 
 import dataclasses
-import sys
-import warnings
 
 import jax
 import numpy as np
@@ -324,20 +322,3 @@ def test_timing_model_validation():
     assert not TimingModel().is_async
     assert TimingModel(tau_max=1e-3).is_async
     assert TimingModel(churn_rate=1.0).is_async
-
-
-# --------------------------------------------------------------------------
-# Back-compat shim
-# --------------------------------------------------------------------------
-
-
-def test_straggler_shim_warns_once_on_import():
-    """`repro.core.straggler` still resolves but deprecates loudly."""
-    sys.modules.pop("repro.core.straggler", None)
-    with pytest.warns(DeprecationWarning, match="repro.core.timing"):
-        import repro.core.straggler as shim
-    assert shim.StragglerModel is TimingModel
-    # re-import from cache: no second warning
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        import repro.core.straggler  # noqa: F401

@@ -202,6 +202,44 @@ def test_make_code_infeasible_messages(scheme, K, S, msg):
         make_code(scheme, K, S)
 
 
+def test_arm_set_rejects_infeasible_arms_at_construction():
+    """The controller regression contract (DESIGN.md §15): an infeasible
+    (family, S, deadline) arm fails AT ARM-SET CONSTRUCTION with the
+    uniform make_code message — never at trace time — and the whole set
+    is pre-checked before any code is built."""
+    from repro.core.coding import check_arm_set, make_arm_set
+
+    good = ("cyclic", 1, None)
+    with pytest.raises(
+        ValueError,
+        match=r"'approx' code infeasible for K=6, S=0: "
+        r"partial recovery needs S >= 1",
+    ):
+        make_arm_set((good, ("approx", 0, 3e-4)), K=6)
+    with pytest.raises(
+        ValueError,
+        match=r"'fractional' code infeasible for K=5, S=1: "
+        r"needs \(S\+1\) \| K",
+    ):
+        check_arm_set((good, ("fractional", 1, None)), K=5)
+    with pytest.raises(ValueError, match=r"'mds' code infeasible"):
+        check_arm_set((good, ("mds", 6, None)), K=6)
+    with pytest.raises(ValueError, match="unknown code family 'bogus'"):
+        check_arm_set((good, ("bogus", 1, None)), K=6)
+    with pytest.raises(ValueError, match="arm set is empty"):
+        check_arm_set((), K=6)
+    with pytest.raises(ValueError, match="duplicate arm"):
+        check_arm_set((good, ("cyclic", 1, None)), K=6)
+    with pytest.raises(ValueError, match="deadline must be positive"):
+        check_arm_set((good, ("approx", 1, -1.0)), K=6)
+    with pytest.raises(ValueError, match="not a \\(scheme, S, deadline\\)"):
+        check_arm_set((("cyclic", 1),), K=6)
+    # The happy path builds one certified code per arm, in arm order.
+    codes = make_arm_set((good, ("approx", 2, 1e-3), ("mds", 1, None)), K=6)
+    assert [c.name for c in codes] == ["cyclic", "approx", "mds"]
+    assert all(c.verify() for c in codes)
+
+
 def test_direct_builders_share_the_uniform_range_message():
     """Direct construction and the make_code registry path raise the
     SAME 'code infeasible' message for an out-of-range (K, S)."""

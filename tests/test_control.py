@@ -1,0 +1,217 @@
+"""Execution-tier and composition tests for the online controller.
+
+The a-csI-ADMM kernel (DESIGN.md §15) runs a UCB1/EXP3 bandit over a
+registered (code family, S, deadline) arm set INSIDE one jitted scan.
+This file pins the systems contracts:
+
+- serial == batched == sharded on adaptive grids, with the device arm
+  -pull sequence bit-identical to the host numpy ``replay`` twin;
+- ONE jitted executable per static group — arm schedules, rewards and
+  bandit hyper-parameters are scan data, never statics;
+- composition with the streaming Reduction carry (§12) and with the
+  event-driven async/churn path (§13): no NaN leaks through dead-agent
+  arm pulls;
+- the reward surface itself (cap, bounds, monotonicity) and the loud
+  config-time failures (empty/infeasible arm sets, unknown policy).
+
+The controller-theory properties (regret, degenerate bit-identity,
+permutation equivariance) live in ``test_control_properties.py``.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.control import ADAPTIVE_KERNEL, device_pulls
+from repro.core.graph import make_network
+from repro.core.problems import DATASETS, allocate
+from repro.core.timing import TimingModel
+from repro.experiments import Case, get_sweep, run_sweep
+from repro.methods import Reduction, driver
+
+ITERS = 30
+
+# A feasible 3-cell slice of the code_frontier grid (K=6).
+ARMS = (("cyclic", 1, None), ("cyclic", 2, None), ("approx", 2, 3e-4))
+
+
+def _case(**kw) -> Case:
+    kw.setdefault("method", "a-csI-ADMM")
+    kw.setdefault("dataset", "synthetic")
+    kw.setdefault("K", 6)
+    kw.setdefault("M", 360)
+    kw.setdefault("iters", ITERS)
+    kw.setdefault("p_straggle", 0.3)
+    kw.setdefault("delay", 5e-3)
+    kw.setdefault("arms", ARMS)
+    return Case(**kw)
+
+
+def _materialize(case: Case):
+    net = make_network(case.N, case.connectivity, seed=case.seed)
+    prob = allocate(DATASETS[case.dataset](case.seed), case.N, case.K)
+    return prob, net
+
+
+# --------------------------------------------------------------------------
+# Tier agreement + device/host pull parity
+# --------------------------------------------------------------------------
+
+
+def test_tier_agreement_serial_batched():
+    """Serial and batched tiers agree on an adaptive grid covering both
+    algorithms; one dispatch group per algorithm (the only static)."""
+    cases = [
+        _case(bandit=a, seed=s) for a in ("ucb1", "exp3") for s in range(2)
+    ]
+    serial = run_sweep(cases, mode="serial")
+    batched = run_sweep(cases, mode="batched")
+    assert batched.n_dispatches == 2
+    for ts, tb in zip(serial.traces, batched.traces):
+        np.testing.assert_allclose(
+            tb.accuracy, ts.accuracy, rtol=1e-5, atol=1e-8
+        )
+        np.testing.assert_allclose(tb.final_z, ts.final_z, rtol=1e-5, atol=1e-8)
+        np.testing.assert_array_equal(tb.sim_time, ts.sim_time)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a device mesh")
+def test_tier_agreement_sharded():
+    """The sharded tier reproduces the serial adaptive trajectory —
+    same scan, different layout (DESIGN.md §9)."""
+    cases = [_case(seed=s) for s in range(len(jax.devices()))]
+    serial = run_sweep(cases, mode="serial")
+    sharded = run_sweep(cases, mode="sharded")
+    for ts, tsh in zip(serial.traces, sharded.traces):
+        np.testing.assert_allclose(
+            tsh.accuracy, ts.accuracy, rtol=1e-5, atol=1e-8
+        )
+
+
+@pytest.mark.parametrize("algo", ["ucb1", "exp3"])
+def test_device_pulls_bit_match_host_replay(algo):
+    """The DEVICE controller's realized arm-pull sequence equals the
+    host numpy ``replay`` bit-for-bit — the determinism `prepare` relies
+    on to realize the pull-dependent clock before dispatch."""
+    case = _case(bandit=algo, iters=60)
+    prob, net = _materialize(case)
+    run = ADAPTIVE_KERNEL.config(case)
+    tab = ADAPTIVE_KERNEL._arm_tables(prob, net, run, case.iters)
+    dev = device_pulls(prob, net, run, case.iters)
+    assert dev.dtype == np.int32
+    np.testing.assert_array_equal(dev, tab["pulls"])
+    # UCB1's deterministic round-robin init pulls every arm once first.
+    if algo == "ucb1":
+        assert list(dev[: len(ARMS)]) == list(range(len(ARMS)))
+
+
+def test_device_pulls_requires_multiple_arms():
+    case = _case(arms=(("cyclic", 1, None),))
+    prob, net = _materialize(case)
+    run = ADAPTIVE_KERNEL.config(case)
+    with pytest.raises(ValueError, match="multi-arm"):
+        device_pulls(prob, net, run, case.iters)
+
+
+# --------------------------------------------------------------------------
+# No retraces; composition with reductions and the async path
+# --------------------------------------------------------------------------
+
+
+def test_adaptive_schedules_cause_no_retrace():
+    """Every seed / bandit hyper-parameter / arm-deadline value of an
+    adaptive grid shares ONE jit trace: arm schedules, reward tables and
+    [c, eta, gamma] ride the scan as data (PR-5/PR-8 pattern)."""
+    driver._batch_fn.cache_clear()
+    cases = [
+        _case(seed=0),
+        _case(seed=1),
+        _case(seed=0, bandit_c=1.5),
+        _case(seed=2, arms=(("cyclic", 1, None), ("cyclic", 2, None),
+                            ("approx", 2, 1e-3))),
+    ]
+    res = run_sweep(cases, mode="batched")
+    assert res.n_dispatches == 1
+    assert driver._batch_fn.cache_info().currsize == 1
+
+
+def test_adaptive_composes_with_streaming_reductions():
+    """Adaptive runs flow through the in-scan Reduction fold (§12):
+    O(grid) summaries on the realized pull-dependent clock, no
+    materialized traces."""
+    spec = dataclasses.replace(
+        get_sweep("adaptive_frontier", iters=24, runs=1),
+        reductions=Reduction(
+            fields=("accuracy",), budgets=(0.5, 1.0), x="sim_time"
+        ),
+    )
+    res = run_sweep(spec, mode="batched")
+    assert res.traces == [] and res.reduced is not None
+    for v in res.reduced.values():
+        assert np.isfinite(v).all()
+
+
+def test_adaptive_async_churn_no_nan_leak():
+    """Bounded staleness + agent churn under the controller: dead-agent
+    arm pulls stay finite (the masked combine of §11 plus the per-arm
+    activity gate), and serial == batched holds on the async program."""
+    case = _case(tau_max=2e-3, churn_rate=2.0, mttr=5e-3)
+    serial = run_sweep([case], mode="serial").traces[0]
+    batched = run_sweep([case], mode="batched").traces[0]
+    assert np.isfinite(serial.accuracy).all()
+    assert np.isfinite(serial.final_z).all()
+    np.testing.assert_allclose(
+        batched.accuracy, serial.accuracy, rtol=1e-5, atol=1e-8
+    )
+
+
+# --------------------------------------------------------------------------
+# Reward surface + loud config-time failures
+# --------------------------------------------------------------------------
+
+
+def test_reward_surface_bounds_and_monotonicity():
+    tm = TimingModel()
+    cap = tm.reward_cap
+    assert cap == tm.epsilon + tm.comm_hi
+    dt = np.linspace(0.0, 2.0 * cap, 101)
+    r = tm.reward(dt)
+    assert r[0] == 1.0 and r[-1] == 0.0
+    assert ((r >= 0.0) & (r <= 1.0)).all()
+    assert (np.diff(r) <= 0.0).all()
+    assert tm.reward(10.0 * cap) == 0.0
+
+
+def test_config_rejects_bad_arm_sets_and_policies():
+    with pytest.raises(ValueError, match="arm set is empty"):
+        ADAPTIVE_KERNEL.config(_case(arms=()))
+    with pytest.raises(ValueError, match="infeasible"):
+        ADAPTIVE_KERNEL.config(_case(arms=(("approx", 0, None),)))
+    with pytest.raises(ValueError, match="duplicate arm"):
+        ADAPTIVE_KERNEL.config(
+            _case(arms=(("cyclic", 1, None), ("cyclic", 1, None)))
+        )
+    with pytest.raises(ValueError, match="unknown bandit"):
+        ADAPTIVE_KERNEL.config(_case(bandit="greedy"))
+
+
+def test_config_rejects_exact_x():
+    """The controller needs the stochastic coded x-update: an exact_x
+    config has no code/deadline frontier to select on."""
+
+    class _ExactCase:
+        def __init__(self, case):
+            self._case = case
+
+        def __getattr__(self, name):
+            return getattr(self._case, name)
+
+        def admm_config(self):
+            return dataclasses.replace(
+                self._case.admm_config(), exact_x=True
+            )
+
+    with pytest.raises(ValueError, match="stochastic coded"):
+        ADAPTIVE_KERNEL.config(_ExactCase(_case()))

@@ -206,6 +206,7 @@ EXPECTED_GRIDS = {
     "fig5": (4, 1),  # the tentpole: whole S sweep shares one trace
     "topology_grid": (15, 1),  # S=0 scheme points merge; eta is runtime
     "code_frontier": (10, 1),  # deadline merges for exact families
+    "adaptive_frontier": (2, 2),  # arms are runtime; one group per algo
 
     "privacy_grid": (8, 1),  # sigma and S are runtime: one trace
     "compression_grid": (9, 3),  # one trace per compressor static

@@ -22,7 +22,7 @@ from repro.methods.compression import CompressionRun
 ITERS = 40
 ALL_METHODS = (
     "sI-ADMM", "csI-ADMM", "I-ADMM", "W-ADMM", "D-ADMM", "DGD", "EXTRA",
-    "pI-ADMM", "cq-sI-ADMM",
+    "pI-ADMM", "cq-sI-ADMM", "a-csI-ADMM",
 )
 
 
@@ -32,6 +32,10 @@ def _case(method: str, seed: int = 0, **kw) -> Case:
     if method == "csI-ADMM":
         kw.setdefault("S", 1)
         kw.setdefault("scheme", "cyclic")
+    if method == "a-csI-ADMM":
+        kw.setdefault(
+            "arms", (("cyclic", 1, None), ("approx", 1, 3e-4))
+        )
     return Case(
         method=method, dataset="usps", N=5, K=3, iters=ITERS, seed=seed, **kw
     )
@@ -44,7 +48,7 @@ def test_registry_covers_every_method():
 
 
 def test_batched_matches_serial_every_method():
-    """vmap-of-step == scan-of-step elementwise, for all nine kernels."""
+    """vmap-of-step == scan-of-step elementwise, for all ten kernels."""
     cases = [_case(m, seed=s) for m in ALL_METHODS for s in (0, 1)]
     batched = run_sweep(cases)
     serial = run_sweep(cases, serial=True)

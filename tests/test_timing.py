@@ -36,6 +36,10 @@ def _case(method: str, **kw) -> Case:
     if method == "csI-ADMM":
         kw.setdefault("S", 1)
         kw.setdefault("scheme", "cyclic")
+    if method == "a-csI-ADMM":
+        kw.setdefault(
+            "arms", (("cyclic", 1, None), ("approx", 1, 3e-4))
+        )
     return Case(method=method, dataset="usps", N=5, K=3, iters=ITERS, **kw)
 
 

@@ -1,6 +1,6 @@
 """Trace-contract analyzer tests (DESIGN.md §14, ISSUE 9).
 
-Three layers:
+Two layers:
 
 - the AST linter against the fixture corpus (`tests/fixtures/lint`):
   each known-bad snippet fires exactly its rule, the clean fixture and
@@ -8,16 +8,12 @@ Three layers:
 - the jaxpr-audit gate logic (`compare_report`) on synthetic reports —
   growth fails, shrinkage notes, callbacks/expect_pallas/f64 fail
   unconditionally — plus one real lowering of the cheapest audit grid
-  checked against the committed `benchmarks/trace_audit.json`;
-- the `core.straggler` deprecation cycle: the shim warns exactly once
-  per process and no in-repo module (src/, benchmarks/, examples/)
-  still imports it.
+  checked against the committed `benchmarks/trace_audit.json`.
 """
 
 import copy
 import json
 import pathlib
-import subprocess
 import sys
 
 import pytest
@@ -44,7 +40,6 @@ FIXTURE_RULES = {
     "callback_in_step.py": "callback-in-scan-body",
     "unfrozen_spec.py": "spec-dataclass-not-frozen",
     "missing_statics_key.py": "statics-key-not-in-signature",
-    "straggler_import.py": "deprecated-straggler-import",
 }
 
 
@@ -230,41 +225,3 @@ def test_real_lowering_matches_pin(grid):
     )
     assert fails == []
     assert fresh[grid]["signatures"] == baseline[grid]["signatures"]
-
-
-# --------------------------------------------------------------------------
-# straggler deprecation cycle (ISSUE 9 satellite)
-# --------------------------------------------------------------------------
-
-
-def test_straggler_shim_warns_exactly_once_per_process():
-    """Even with warnings forced to 'always', the shim's module body
-    runs once per process — so exactly ONE DeprecationWarning."""
-    code = (
-        "import warnings\n"
-        "with warnings.catch_warnings(record=True) as w:\n"
-        "    warnings.simplefilter('always')\n"
-        "    import repro.core.straggler\n"
-        "    import repro.core.straggler  # cached: no re-execution\n"
-        "dep = [x for x in w if issubclass(x.category, DeprecationWarning)\n"
-        "       and 'repro.core.timing' in str(x.message)]\n"
-        "print(len(dep))\n"
-    )
-    out = subprocess.run(
-        [sys.executable, "-c", code],
-        capture_output=True, text=True, check=True,
-        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"},
-    )
-    assert out.stdout.strip() == "1"
-
-
-def test_no_in_repo_module_imports_the_shim():
-    """src/, benchmarks/ and examples/ are all shim-free — the linter's
-    deprecated-import rule applied beyond its default src/ scope."""
-    dirs = [ROOT / "src", ROOT / "benchmarks", ROOT / "examples"]
-    findings = [
-        f
-        for f in lint_paths([d for d in dirs if d.exists()], root=ROOT)
-        if f.rule == "deprecated-straggler-import"
-    ]
-    assert findings == []
